@@ -1,0 +1,19 @@
+"""Latency-formula validation (paper §1.2): simulated active communication
+steps vs the analytic ``4h - 3 + 3(b - 1)`` across processor counts."""
+
+from __future__ import annotations
+
+from repro.core.simulator import count_active_steps
+from repro.core.topology import build_dual_tree
+
+
+def run(csv_out):
+    b = 16
+    for p in (2, 6, 14, 30, 62, 126, 254, 16, 100, 256):
+        sim, paper = count_active_steps(p, b)
+        csv_out(f"latency_steps/p={p}", sim,
+                f"formula={paper} delta={sim - paper}")
+    # height scaling: doubling p adds ~4 steps (O(log p) latency term)
+    heights = {p: build_dual_tree(p).max_depth for p in (62, 126, 254)}
+    csv_out("tree_height_doubling", heights[254] - heights[126],
+            f"heights {heights}")

@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure + framework extras.
+
+Prints ``name,value,derived`` CSV lines. Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only collectives,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (bench_blocksize, bench_collectives, bench_kernels,
+                        bench_latency_model)
+
+SUITES = {
+    # paper Fig 1 / Table 2: four reduction-to-all implementations x sizes
+    "collectives": bench_collectives.run,
+    # paper's open question #1: pipeline block size
+    "blocksize": bench_blocksize.run,
+    # paper §1.2 latency formula
+    "latency": bench_latency_model.run,
+    # kernel layer
+    "kernels": bench_kernels.run,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(SUITES))
+    args = ap.parse_args(argv)
+    chosen = (args.only.split(",") if args.only else list(SUITES))
+
+    failures = []
+
+    def csv_out(name, value, derived=""):
+        print(f"{name},{value},{derived}")
+
+    for name in chosen:
+        print(f"# ---- {name} ----")
+        try:
+            SUITES[name](csv_out)
+        except Exception as e:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"{name},ERROR,{e}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,32 @@
+"""Quickstart: train a tiny LM end-to-end on one CPU device.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Uses the same public API the production launcher uses: config registry,
+synthetic data pipeline, AdamW+WSD, and the train-step builder (on a 1x1 mesh
+the collective degenerates to identity — see train_multihost_ft.py for the
+multi-device path).
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import repro.launch.train as T  # noqa: E402
+
+
+def main():
+    out = T.main([
+        "--arch", "minicpm_2b", "--reduced",
+        "--steps", "40", "--seq-len", "64", "--global-batch", "8",
+        "--lr", "2e-3", "--log-every", "5",
+    ])
+    first = out["history"][0][1]
+    last = out["final_loss"]
+    print(f"\nloss {first:.3f} -> {last:.3f} "
+          f"({'OK: decreased' if last < first else 'FAILED'})")
+    assert last < first
+
+
+if __name__ == "__main__":
+    main()

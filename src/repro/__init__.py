@@ -1,0 +1,12 @@
+"""repro: a multi-pod JAX training/serving framework built around the
+doubly-pipelined, dual-root reduction-to-all collective (Träff, 2021).
+
+Public surface:
+  repro.core        — the collective algorithms, topology, cost model
+  repro.models      — the architecture zoo (dense/MoE/SSM/hybrid/enc-dec)
+  repro.configs     — assigned architectures x shape suites
+  repro.launch      — mesh, dry-run, train/serve drivers
+  repro.kernels     — Pallas TPU kernels (+ jnp oracles)
+"""
+
+__version__ = "1.0.0"

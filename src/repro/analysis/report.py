@@ -1,0 +1,84 @@
+"""Render EXPERIMENTS.md tables from dryrun_results.json.
+
+  PYTHONPATH=src python -m repro.analysis.report dryrun_results.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    return f"{b / 1e9:.2f}"
+
+
+def dryrun_table(results):
+    rows = ["| arch | shape | mesh | status | compile s | chip GB | fits 16G "
+            "| collective ops (one trip) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] != "ok":
+            reason = r.get("reason", r.get("error", ""))[:40]
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"{r['status']} ({reason}) | | | | |")
+            continue
+        ops = r["collectives"]["op_counts"]
+        opstr = " ".join(f"{k.split('-')[-1] if '-' in k else k}:{v}"
+                         for k, v in sorted(ops.items()))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r['compile_s']} | {fmt_bytes(r['memory']['per_chip_total'])} "
+            f"| {'Y' if r['memory']['fits_16GB'] else 'N'} | {opstr} |")
+    return "\n".join(rows)
+
+
+def roofline_table(results, mesh="16x16"):
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant "
+            "| MODEL_FLOPS | useful | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh or r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} "
+            f"| {t['collective_s']:.2e} "
+            f"| {t['dominant'].replace('_s', '')} "
+            f"| {t['model_flops']:.2e} | {t['useful_ratio']:.2f} "
+            f"| {t['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb(results, mesh="16x16"):
+    ok = [r for r in results if r["status"] == "ok" and r["mesh"] == mesh]
+    worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = max(ok, key=lambda r: (r["roofline"]["collective_s"]
+                                  / max(r["roofline"]["step_s_lower_bound"],
+                                        1e-12)))
+    return worst, coll
+
+
+def main():
+    results = json.load(open(sys.argv[1] if len(sys.argv) > 1
+                             else "dryrun_results.json"))
+    ok = [r for r in results if r["status"] == "ok"]
+    print(f"## Dry-run summary: {len(ok)} compiled cells, "
+          f"{sum(1 for r in results if r['status'] == 'skipped')} documented "
+          f"skips, {sum(1 for r in results if r['status'] == 'error')} errors\n")
+    print(dryrun_table(results))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(results, "16x16"))
+    print("\n## Roofline (multi-pod 2x16x16)\n")
+    print(roofline_table(results, "2x16x16"))
+    worst, coll = pick_hillclimb(results)
+    print(f"\nworst roofline fraction: {worst['arch']}:{worst['shape']} "
+          f"({worst['roofline']['roofline_fraction']:.3f})")
+    print(f"most collective-bound: {coll['arch']}:{coll['shape']} "
+          f"(coll {coll['roofline']['collective_s']:.2e}s of bound "
+          f"{coll['roofline']['step_s_lower_bound']:.2e}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Roofline assembly: parse compiled HLO for collective traffic + merge with
+the analytic model (see analysis/flops.py for why analytic is primary).
+
+``parse_collective_bytes`` walks the compiled HLO text and sums the operand
+bytes of every collective op (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute). Ops inside ``while``-loop bodies execute
+trip-count times but appear once in the text; we report both the raw one-trip
+sum and a per-op-kind breakdown so the §Perf iterations can see *which*
+collective moved. Shapes in the SPMD module are per-device; following the
+assignment's convention the reported ``collective_bytes`` is the global value
+(per-device x chips) so that ``collective_bytes / (chips x link_bw)`` is the
+per-device wire time.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import Counter
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(\([^)]*\)|[\w\[\]{,}\d]+)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[\w\-]*\(")
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)"
+                       r"\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str, n_chips: int | None = None) -> dict:
+    """Per-kind operand-byte totals (one loop trip) from compiled HLO text."""
+    counts: Counter = Counter()
+    bytes_by_kind: Counter = Counter()
+    for m in _COLL_RE.finditer(hlo_text):
+        out_shape, kind = m.group(2), m.group(3)
+        b = _shape_bytes(out_shape)
+        counts[kind] += 1
+        bytes_by_kind[kind] += b
+    return {
+        "op_counts": dict(counts),
+        "bytes_by_kind_one_trip": dict(bytes_by_kind),
+        "total_bytes_one_trip": int(sum(bytes_by_kind.values())),
+        "note": ("per-device shapes from the SPMD module; while-loop bodies "
+                 "counted once — analytic model supplies trip counts"),
+    }
+
+
+def summarize(results: list) -> str:
+    """Markdown table for EXPERIMENTS.md §Roofline from dry-run records."""
+    rows = []
+    head = ("| arch | shape | mesh | compute s | memory s | collective s | "
+            "dominant | MODEL_FLOPS | useful ratio | roofline frac |")
+    sep = "|" + "---|" * 10
+    rows.append(head)
+    rows.append(sep)
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"{r['status']} | | | | | | |")
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} "
+            f"| {t['collective_s']:.2e} | {t['dominant'].replace('_s','')} "
+            f"| {t['model_flops']:.2e} | {t['useful_ratio']:.2f} "
+            f"| {t['roofline_fraction']:.2f} |")
+    return "\n".join(rows)

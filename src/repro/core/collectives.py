@@ -1,0 +1,302 @@
+"""Public collective API: every reduction in the framework goes through here.
+
+The central entry points are :func:`all_reduce` (flat vectors) and
+:func:`bucketed_all_reduce` (gradient pytrees). Algorithm selection follows the
+paper's experimental lesson — Table 2 shows OpenMPI collapsing in the mid-range
+because of a bad internal algorithm switch — so the ``auto`` method picks the
+algorithm *and* the pipeline block count from the alpha-beta cost model
+(:mod:`repro.core.cost_model`), and both can be overridden per call site.
+
+Must be called inside a ``shard_map`` that is manual over ``axis_name``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core.dptree import (dptree_allreduce, redbcast_allreduce,
+                               ring_allreduce, sptree_allreduce)
+from repro.core.topology import build_dual_tree
+
+__all__ = [
+    "CollectiveConfig",
+    "all_reduce",
+    "bucketed_all_reduce",
+    "structured_all_reduce",
+    "all_reduce_mean",
+]
+
+METHODS = ("auto", "dptree", "sptree", "redbcast", "ring", "psum")
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveConfig:
+    """How gradient/activation reductions are executed.
+
+    ``method``       one of METHODS. ``auto`` = cost-model switch per size.
+    ``num_blocks``   pipeline block count; None = Pipelining-Lemma optimum.
+    ``compression``  None | 'bf16' — cast payload before the wire, cast back.
+    ``bucket_bytes`` split grad pytrees into buckets of at most this many
+                     bytes; XLA's scheduler can overlap bucket k's collective
+                     with bucket k+1's producers.
+    ``comm_model``   alpha-beta constants used by the auto switch/tuner.
+    """
+
+    method: str = "dptree"
+    num_blocks: int | None = None
+    compression: str | None = None
+    bucket_bytes: int = 1 << 30
+    comm_model: cm.CommModel = cm.TPU_V5E
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f"unknown method {self.method!r}; want {METHODS}")
+        if self.compression not in (None, "bf16"):
+            raise ValueError(f"unknown compression {self.compression!r}")
+
+
+def _pick(method: str, p: int, nbytes: int, model: cm.CommModel) -> str:
+    if method != "auto":
+        return method
+    # psum is XLA's own allreduce; we only auto-pick among algorithms whose
+    # cost we model. The paper's point stands: never let the library guess.
+    return cm.best_algorithm(p, float(max(nbytes, 1)), model)
+
+
+def _nblocks(num_blocks, p, nbytes, model, algorithm):
+    if num_blocks is not None:
+        return int(num_blocks)
+    if algorithm in ("dptree", "sptree", "redbcast"):
+        return cm.optimal_blocks(p, float(max(nbytes, 1)), model, algorithm)
+    return 1
+
+
+def _lane_shard(x: jax.Array) -> jax.Array:
+    """Keep 2-D (rows, lanes) payloads sharded on the lane dim over the (auto)
+    'model' axis. No-op outside a mesh or when 'model' is absent."""
+    if x.ndim != 2:
+        return x
+    from repro.models.layers import maybe_shard  # local: avoids import cycle
+    from jax.sharding import PartitionSpec as _P
+    return maybe_shard(x, _P(None, "model"))
+
+
+def all_reduce(x: jax.Array, axis_name: str, p: int,
+               config: CollectiveConfig = CollectiveConfig(),
+               op: Callable = jnp.add,
+               shard_spec=None) -> jax.Array:
+    """Allreduce an array over ``axis_name``.
+
+    1-D payloads pipeline directly; 2-D ``(rows, lanes)`` payloads pipeline
+    over rows with the lane dim left to GSPMD (the gradient-bucket layout:
+    lanes shard over 'model' so no buffer is ever replicated). Higher-rank
+    payloads pipeline over dim 0 *without flattening* — flattening a tensor
+    with GSPMD-sharded trailing dims would all-gather it to full size — and
+    ``shard_spec`` (the leaf's own PartitionSpec) is pinned on the scan carry.
+    """
+    if p == 1:
+        return x
+    shape, dtype = x.shape, x.dtype
+    carry_spec = None
+    if x.ndim <= 1:
+        flat = x.reshape(-1)
+    elif x.ndim == 2:
+        flat = _lane_shard(x)
+    else:
+        flat = x
+        if shard_spec is not None:
+            from jax.sharding import PartitionSpec as _P
+            entries = list(shard_spec) + [None] * (x.ndim - len(shard_spec))
+            carry_spec = _P(None, *entries)   # blockify splits dim 0
+    if config.compression == "bf16" and flat.dtype == jnp.float32:
+        flat = flat.astype(jnp.bfloat16)
+    nbytes = flat.size * flat.dtype.itemsize
+    algo = _pick(config.method, p, nbytes, config.comm_model)
+    nb = _nblocks(config.num_blocks, p, nbytes, config.comm_model, algo)
+    if algo == "psum":
+        out = jax.lax.psum(flat, axis_name)
+    elif algo == "dptree":
+        out = dptree_allreduce(flat, axis_name, p, num_blocks=nb, op=op,
+                               carry_spec=carry_spec)
+    elif algo == "sptree":
+        out = sptree_allreduce(flat, axis_name, p, num_blocks=nb, op=op,
+                               carry_spec=carry_spec)
+    elif algo == "redbcast":
+        out = redbcast_allreduce(flat, axis_name, p, num_blocks=nb, op=op)
+    elif algo == "ring":
+        out = ring_allreduce(flat, axis_name, p, op=op)
+    else:  # pragma: no cover
+        raise AssertionError(algo)
+    if out.ndim == 2:
+        out = _lane_shard(out)
+    return out.astype(dtype).reshape(shape)
+
+
+def all_reduce_mean(x: jax.Array, axis_name: str, p: int,
+                    config: CollectiveConfig = CollectiveConfig()) -> jax.Array:
+    return all_reduce(x, axis_name, p, config) / p
+
+
+def bucketed_all_reduce(tree: Any, axis_name: str, p: int,
+                        config: CollectiveConfig = CollectiveConfig(),
+                        leaf_specs: Any = None) -> Any:
+    """Gradient-pytree allreduce with flat bucketing.
+
+    Leaves are grouped by dtype, concatenated into contiguous buckets of at
+    most ``config.bucket_bytes``, reduced as single long vectors (the paper's
+    ``m``), and scattered back. One long pipelined vector amortizes the latency
+    term far better than per-tensor reductions — this is the framework analogue
+    of the paper reducing one m-element vector. ``bucket_bytes`` also bounds
+    the replicated concat buffer per chip.
+
+    ``leaf_specs`` (optional PartitionSpec pytree matching ``tree``) re-pins
+    each reduced leaf to its original GSPMD sharding — without it the slices
+    of the (replicated) bucket would leave the whole gradient tree replicated.
+    """
+    if p == 1:
+        return tree
+    from repro.models.layers import maybe_shard  # local: avoids import cycle
+    leaves, treedef = jax.tree.flatten(tree)
+    specs = (jax.tree.leaves(leaf_specs,
+                             is_leaf=lambda v: isinstance(v, jax.sharding.PartitionSpec))
+             if leaf_specs is not None else [None] * len(leaves))
+    out = [None] * len(leaves)
+    n_model = _mesh_axis_size("model")
+
+    def model_dim(k):
+        """Index of the leaf dim sharded exactly over 'model', or None."""
+        if specs[k] is None or n_model is None:
+            return None
+        entries = list(specs[k]) + [None] * (leaves[k].ndim - len(specs[k]))
+        for d, e in enumerate(entries):
+            names = e if isinstance(e, tuple) else ((e,) if e else ())
+            if names == ("model",) and leaves[k].shape[d] % n_model == 0:
+                return d
+            if names and names != ("model",):
+                return -1  # sharded some other way -> per-leaf path
+        return None
+
+    # Partition leaves into: model-sharded (shard-major bucket), replicated
+    # (plain flat bucket), and other-sharded (reduced per leaf, no bucketing).
+    # Shard-major layout: moveaxis the 'model' dim first, split it into
+    # (n_model, S/n_model * rest) — every reshape is partition-LOCAL, so no
+    # leaf is ever gathered to full size just to enter a bucket (flattening a
+    # sharded tensor directly would all-gather it: element order interleaves).
+    by_kind = {"model": [], "repl": [], "other": []}
+    for k in range(len(leaves)):
+        d = model_dim(k)
+        if d is None:
+            by_kind["repl"].append(k)
+        elif d < 0:
+            by_kind["other"].append(k)
+        else:
+            by_kind["model"].append((k, d))
+
+    for k in by_kind["other"]:
+        red = all_reduce(leaves[k], axis_name, p, config,
+                         shard_spec=specs[k])
+        out[k] = maybe_shard(red, specs[k]) if specs[k] is not None else red
+
+    def buckets(items, size_of):
+        items = sorted(items, key=lambda it: str(size_of(it)[1]))
+        i = 0
+        while i < len(items):
+            dt = size_of(items[i])[1]
+            group, sz = [], 0
+            while i < len(items) and size_of(items[i])[1] == dt \
+                    and (not group or sz < config.bucket_bytes):
+                group.append(items[i])
+                sz += size_of(items[i])[0] * dt.itemsize
+                i += 1
+            yield group
+
+    # --- model-sharded leaves: (n_model, L) pieces, concat on dim 1 --------
+    for group in buckets(by_kind["model"],
+                         lambda it: (leaves[it[0]].size, leaves[it[0]].dtype)):
+        pieces = []
+        for k, d in group:
+            v = jnp.moveaxis(leaves[k], d, 0)
+            v = v.reshape(n_model, v.size // n_model)
+            pieces.append(maybe_shard(v, jax.sharding.PartitionSpec("model")))
+        mat = jnp.concatenate(pieces, axis=1) if len(pieces) > 1 else pieces[0]
+        # pipeline over the unsharded dim: (L_total, n_model) lanes-sharded
+        mat = maybe_shard(mat.T, jax.sharding.PartitionSpec(None, "model"))
+        red = all_reduce(mat, axis_name, p, config)
+        red = maybe_shard(red, jax.sharding.PartitionSpec(None, "model")).T
+        red = maybe_shard(red, jax.sharding.PartitionSpec("model"))
+        off = 0
+        for k, d in group:
+            n = leaves[k].size // n_model
+            shp = leaves[k].shape
+            v = red[:, off:off + n].reshape(
+                (shp[d],) + shp[:d] + shp[d + 1:])
+            leaf = jnp.moveaxis(v, 0, d)
+            out[k] = maybe_shard(leaf, specs[k]) if specs[k] is not None \
+                else leaf
+            off += n
+
+    # --- replicated leaves: plain flat bucket ------------------------------
+    for group in buckets(by_kind["repl"],
+                         lambda k: (leaves[k].size, leaves[k].dtype)):
+        flat = jnp.concatenate([leaves[k].reshape(-1) for k in group]) \
+            if len(group) > 1 else leaves[group[0]].reshape(-1)
+        red = all_reduce(flat, axis_name, p, config)
+        off = 0
+        for k in group:
+            n = leaves[k].size
+            out[k] = red[off:off + n].reshape(leaves[k].shape)
+            off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def _mesh_axis_size(name: str) -> int | None:
+    env = jax.sharding.get_abstract_mesh()
+    if env is None or env.empty:
+        return None
+    shape = dict(env.shape_tuple)
+    return shape.get(name)
+
+
+def structured_all_reduce(tree: Any, axis_name: str, p: int,
+                          combine: Callable[[Any, Any], Any],
+                          method: str = "dptree") -> Any:
+    """Latency-critical allreduce of a *structured* value under a custom
+    associative ``combine`` (e.g. flash-decoding softmax partials: (max, sum,
+    out) triples). Uses a single pipeline block (b=1), where the dual-root tree
+    is the log-latency optimum — the regime the paper's algorithm targets.
+
+    ``combine(a, b)`` takes and returns pytrees shaped like ``tree``.
+    """
+    if p == 1:
+        return tree
+    leaves, treedef = jax.tree.flatten(tree)
+    sizes = [l.size for l in leaves]
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    wide = jnp.result_type(*dtypes)
+    flat = jnp.concatenate([l.astype(wide).reshape(-1) for l in leaves])
+
+    def unpack(v):
+        out, off = [], 0
+        for s, sh, dt in zip(sizes, shapes, dtypes):
+            out.append(v[off:off + s].reshape(sh).astype(dt))
+            off += s
+        return jax.tree.unflatten(treedef, out)
+
+    def pack(t):
+        ls = jax.tree.leaves(t)
+        return jnp.concatenate([l.astype(wide).reshape(-1) for l in ls])
+
+    def op(a, b):
+        return pack(combine(unpack(a), unpack(b)))
+
+    fn = {"dptree": dptree_allreduce, "sptree": sptree_allreduce}[method]
+    red = fn(flat, axis_name, p, num_blocks=1, op=op, op_rev=op)
+    return unpack(red)

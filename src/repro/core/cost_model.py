@@ -1,0 +1,192 @@
+"""Linear (alpha-beta-gamma) cost model for the paper's collectives.
+
+The paper analyses all algorithms in a round-based, uniform, linear-cost model:
+a bidirectional exchange of ``n`` elements costs ``alpha + beta * n``; applying
+the reduction operator costs ``gamma`` per element.
+
+This module provides:
+
+* closed-form ``T(b)`` for each implemented algorithm,
+* the "Pipelining Lemma" optimal block count/size (the paper's open question #1
+  is how to choose ``b`` — we expose both the analytic optimum and a tuner hook),
+* hardware presets (TPU v5e ICI, plus the paper's OmniPath cluster fit) so the
+  same formulas drive the roofline's collective term and the auto algorithm
+  switch in :mod:`repro.core.collectives`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.topology import build_dual_tree, build_single_tree
+
+__all__ = [
+    "CommModel",
+    "TPU_V5E",
+    "TPU_V5E_INTERPOD",
+    "PAPER_HYDRA",
+    "dptree_time",
+    "sptree_time",
+    "redbcast_time",
+    "ring_time",
+    "optimal_blocks",
+    "best_algorithm",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CommModel:
+    """alpha [s], beta [s/byte], gamma [s/byte] linear communication model."""
+
+    alpha: float
+    beta: float
+    gamma: float = 0.0
+    name: str = "custom"
+
+    def exchange(self, nbytes: float) -> float:
+        return self.alpha + self.beta * nbytes
+
+
+# TPU v5e: ~50 GB/s/link ICI each direction, ~1 us effective collective-step
+# launch/sync latency; gamma from 819 GB/s HBM streaming of a 3-operand combine.
+TPU_V5E = CommModel(alpha=1e-6, beta=1.0 / 50e9, gamma=3.0 / 819e9, name="tpu_v5e_ici")
+# Inter-pod (DCN / optical) links: higher latency, lower bandwidth per chip.
+TPU_V5E_INTERPOD = CommModel(alpha=10e-6, beta=1.0 / 25e9, gamma=3.0 / 819e9,
+                             name="tpu_v5e_interpod")
+# Rough fit of the paper's Hydra cluster numbers (OmniPath, 36x32, MPI):
+# alpha ~ 16.75us MPI_Allreduce at count=1; per-int time from the large-count
+# column: ~56.2ms at 8.4M ints over p=288 -> beta ~ 1.6ns/B effective.
+PAPER_HYDRA = CommModel(alpha=8e-6, beta=1.6e-9, gamma=0.2e-9, name="paper_hydra")
+
+
+def _dual_tree_height(p: int) -> int:
+    return build_dual_tree(p).max_depth
+
+
+def _single_tree_height(p: int) -> int:
+    return build_single_tree(p).max_depth
+
+
+def _tree_steps(topo, b: int) -> int:
+    """Active communication steps of the static schedule: macro-rounds times
+    the number of non-empty edge classes (p=2 has ONE class — the bare dual
+    exchange costs b steps, not 3b; the balanced case recovers 4h-3+3(b-1))."""
+    return topo.num_macro_rounds(b) * max(1, len(topo.active_classes()))
+
+
+def dptree_time(p: int, m_bytes: float, b: int, model: CommModel) -> float:
+    """Doubly-pipelined dual-root allreduce: ``~(4h-3+3(b-1))*(alpha+beta*m/b)``
+    via the actual topology schedule (exact for non-power-of-two p and for
+    the degenerate p=2 dual-root exchange). The gamma term adds at most
+    ``3*gamma*m/b`` per round (two child combines + the root's dual combine).
+    """
+    if p == 1:
+        return 0.0
+    steps = _tree_steps(build_dual_tree(p), b)
+    per = model.exchange(m_bytes / b) + model.gamma * (m_bytes / b)
+    return steps * per
+
+
+def sptree_time(p: int, m_bytes: float, b: int, model: CommModel) -> float:
+    """Single doubly-pipelined tree (paper §1.2): latency ``4h`` instead of 4h-3."""
+    if p == 1:
+        return 0.0
+    h = _single_tree_height(p) + 1
+    steps = 4 * h + 3 * (b - 1)
+    per = model.exchange(m_bytes / b) + model.gamma * (m_bytes / b)
+    return steps * per
+
+
+def redbcast_time(p: int, m_bytes: float, b: int, model: CommModel) -> float:
+    """Pipelined reduce followed by pipelined broadcast: ``2(2h+2(b-1))(..)``."""
+    if p == 1:
+        return 0.0
+    h = _single_tree_height(p) + 1
+    steps = 2 * (2 * h + 2 * (b - 1))
+    per = model.exchange(m_bytes / b) + model.gamma * (m_bytes / b)
+    return steps * per
+
+
+def ring_time(p: int, m_bytes: float, model: CommModel,
+              bidirectional: bool = True) -> float:
+    """Ring reduce-scatter + all-gather. Bidirectional halves the beta term."""
+    if p == 1:
+        return 0.0
+    steps = 2 * (p - 1)
+    chunk = m_bytes / p
+    if bidirectional:
+        chunk = chunk / 2.0
+    return steps * (model.exchange(chunk) + model.gamma * chunk)
+
+
+def optimal_blocks(p: int, m_bytes: float, model: CommModel,
+                   algorithm: str = "dptree") -> int:
+    """Pipelining-Lemma block count: balance the +3b alpha term vs beta*m/b.
+
+    For ``T(b) = (L + c*b)(alpha + beta*m/b)``, the optimum is
+    ``b* = sqrt(L * beta * m / (c * alpha))``. Clamped to [1, m_bytes/64] so a
+    block never goes below 64 bytes (one cache line / lane group).
+    """
+    if p == 1 or m_bytes <= 0:
+        return 1
+    if algorithm == "dptree":
+        topo = build_dual_tree(p)
+        c = float(max(1, len(topo.active_classes())))
+        # steps(b) ~ c*b + lat with lat = steps(1) - c; lat == 0 (p=2, the
+        # bare dual exchange) means pipelining buys nothing: b* = 1.
+        lat = _tree_steps(topo, 1) - c
+        if lat <= 0:
+            return 1
+    elif algorithm == "sptree":
+        h = _single_tree_height(p) + 1
+        lat, c = 4 * h - 3, 3.0
+    elif algorithm == "redbcast":
+        h = _single_tree_height(p) + 1
+        lat, c = 4 * h - 4, 4.0
+    else:
+        raise ValueError(f"no pipelined form for {algorithm!r}")
+    lat = max(lat, 1)
+    beta_eff = model.beta + model.gamma
+    b = math.sqrt(lat * beta_eff * m_bytes / (c * model.alpha))
+    b = int(max(1, min(b, m_bytes / 64)))
+    return max(1, b)
+
+
+def best_algorithm(p: int, m_bytes: float, model: CommModel) -> str:
+    """Size-adaptive switch (what OpenMPI got wrong in the paper's Table 2).
+
+    Evaluates every implemented algorithm at its own best block size and picks
+    the fastest. Small m -> tree (log-latency); huge m -> ring (bandwidth).
+    """
+    cands = {
+        "dptree": dptree_time(p, m_bytes, optimal_blocks(p, m_bytes, model, "dptree"), model),
+        "sptree": sptree_time(p, m_bytes, optimal_blocks(p, m_bytes, model, "sptree"), model),
+        "redbcast": redbcast_time(p, m_bytes, optimal_blocks(p, m_bytes, model, "redbcast"), model),
+        "ring": ring_time(p, m_bytes, model),
+    }
+    return min(cands, key=cands.get)
+
+
+def predicted_table(p: int, sizes_bytes, model: CommModel, b_elems: int = 16000,
+                    elem_bytes: int = 4) -> "np.ndarray":
+    """Model-predicted analogue of the paper's Table 2 (fixed block *size*).
+
+    The paper fixes the block size at 16000 elements; the number of blocks is
+    then ``ceil(m / 16000)``. Returns rows of
+    (bytes, dptree, sptree, redbcast, ring) times in seconds.
+    """
+    rows = []
+    blk_bytes = b_elems * elem_bytes
+    for m in sizes_bytes:
+        b = max(1, int(math.ceil(m / blk_bytes)))
+        rows.append((
+            m,
+            dptree_time(p, m, b, model),
+            sptree_time(p, m, b, model),
+            redbcast_time(p, m, b, model),
+            ring_time(p, m, model),
+        ))
+    return np.array(rows)

@@ -1,0 +1,375 @@
+"""JAX (shard_map + ppermute) implementations of the paper's collectives.
+
+All functions here must be called *inside* a ``jax.shard_map`` region that is
+manual over ``axis_name``. Device-varying control is expressed with
+``jax.lax.axis_index`` + gathers from host-built topology constants; the three
+static edge classes become three pairs of ``ppermute`` permutations executed
+per macro-round inside a ``lax.scan``.
+
+Cost shape (matching the paper's model): each macro-round moves one pipeline
+block per active edge *in both directions at once* — the up-permutation carries
+partial blocks toward the roots while the down-permutation carries finished
+result blocks toward the leaves, i.e. the "telephone-like" bidirectional
+exchange realized on full-duplex ICI links.
+
+Implemented algorithms:
+
+* :func:`dptree_allreduce`  — doubly-pipelined dual-root (the paper, Alg. 1)
+* :func:`sptree_allreduce`  — single-tree doubly-pipelined variant (§1.2)
+* :func:`redbcast_allreduce`— pipelined reduce + pipelined bcast (User-Allreduce1)
+* :func:`ring_allreduce`    — bidirectional ring reduce-scatter + all-gather
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import (NO_NODE, TreeTopology, build_dual_tree,
+                                 build_single_tree)
+
+__all__ = [
+    "dptree_allreduce",
+    "sptree_allreduce",
+    "redbcast_allreduce",
+    "ring_allreduce",
+]
+
+Op = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+def _blockify(x: jax.Array, b: int) -> tuple:
+    """Split dim 0 into b pipeline blocks. x: (m,) or (R, W) — the 2-D form
+    keeps trailing lanes GSPMD-sharded (bucketed gradients use it)."""
+    m = x.shape[0]
+    blk = -(-m // b)
+    pad = b * blk - m
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    return x.reshape((b, blk) + x.shape[1:]), m
+
+
+def _const(arr: np.ndarray, i: jax.Array) -> jax.Array:
+    """Per-device lookup into a host-built topology constant."""
+    return jnp.asarray(arr)[i]
+
+
+
+
+def _pin_lanes(x: jax.Array, spec=None) -> jax.Array:
+    """Pin the carry sharding INSIDE scan bodies — GSPMD does not reliably
+    propagate it into while-loops, and an unpinned carry replicates the whole
+    bucket on every chip. ``spec`` (a PartitionSpec over the blockified carry
+    dims) overrides the default lanes-over-'model' heuristic."""
+    if x.ndim < 2:
+        return x
+    from jax.sharding import PartitionSpec as _P
+    from repro.models.layers import maybe_shard  # lazy: no import cycle
+    if spec is None:
+        spec = _P(*([None] * (x.ndim - 1) + ["model"]))
+    return maybe_shard(x, spec)
+
+
+def _tree_allreduce(x: jax.Array, axis_name: str, topo: TreeTopology,
+                    num_blocks: int, op: Op, op_rev: Op | None,
+                    carry_spec=None) -> jax.Array:
+    """Shared engine for the dual-root and single-tree variants."""
+    p = topo.p
+    if p == 1:
+        return x
+    b = int(num_blocks)
+    Y, m = _blockify(x, b)
+    blk = Y.shape[1]
+    op_rev = op_rev or op
+
+    i = jax.lax.axis_index(axis_name)
+    phi = _const(topo.phi, i)
+    dep = _const(topo.depth, i)
+    has_c0 = _const(topo.child0 != NO_NODE, i)
+    has_c1 = _const(topo.child1 != NO_NODE, i)
+    has_par = _const(topo.parent != NO_NODE, i)
+    is_root = _const(topo.parent == NO_NODE, i)
+    is_lower_root = is_root & (_const(topo.tree_id, i) == 0)
+    dual_active = topo.dual and len(topo.roots) == 2
+
+    classes = topo.active_classes()
+    R = topo.num_macro_rounds(b)
+
+    def step(Y, s, e):
+        """One global step on edge class ``e`` (two paired ppermutes)."""
+        rel = s - phi
+        mod = jnp.mod(rel, 3)
+        jA = jnp.floor_divide(rel, 3)
+        jB = jnp.floor_divide(rel - 1, 3)
+        jC = jnp.floor_divide(rel - 2, 3)
+        amA = (mod == 0) & has_c0
+        amB = (mod == 1) & has_c1
+        amC_par = (mod == 2) & has_par
+        amC_root = (mod == 2) & is_root & dual_active
+        amAB = amA | amB
+        jAB = jnp.where(amA, jA, jB)
+
+        def take(idx):
+            # dynamic_slice, not gather: scalar-index gathers over arrays with
+            # GSPMD-sharded trailing dims crash XLA's gather partitioner at
+            # high device counts; dynamic-slice partitions cleanly.
+            return jax.lax.dynamic_slice_in_dim(
+                Y, jnp.clip(idx, 0, b - 1), 1, axis=0)[0]
+
+        in_range = lambda j: (j >= 0) & (j < b)
+        # --- payloads ---------------------------------------------------
+        up_out = take(jC)                 # C-role: partial block to parent/dual
+        jD = jAB - dep - 1                # A/B-role: result block to the child
+        down_out = take(jD)
+        # --- the bidirectional exchange (one full-duplex step) -----------
+        t_up = jax.lax.ppermute(up_out, axis_name, topo.up_pairs[e])
+        t_down = (jax.lax.ppermute(down_out, axis_name, topo.down_pairs[e])
+                  if topo.down_pairs[e] else jnp.zeros_like(down_out))
+        # --- apply ------------------------------------------------------
+        cur_ab = take(jAB)
+        red_ab = op(t_up, cur_ab)         # Alg. 1 lines 4/6: t (.) Y
+        cur_c = take(jC)
+        red_root = jnp.where(is_lower_root, op_rev(cur_c, t_up),  # Y (.) t
+                             op(t_up, cur_c))                     # t (.) Y
+        jRecv = jC - dep                  # result block index from the parent
+        upd_idx = jnp.where(amAB, jAB, jnp.where(amC_root, jC, jRecv))
+        upd_val = jnp.where(amAB, red_ab,
+                            jnp.where(amC_root, red_root, t_down))
+        do_upd = ((amAB & in_range(jAB))
+                  | (amC_root & in_range(jC))
+                  | (amC_par & in_range(jRecv)))
+        ci = jnp.clip(upd_idx, 0, b - 1)
+        cur_ci = jax.lax.dynamic_slice_in_dim(Y, ci, 1, axis=0)[0]
+        new_val = jnp.where(do_upd, upd_val, cur_ci)
+        return jax.lax.dynamic_update_slice(Y, new_val[None],
+                                    (ci,) + (0,) * (Y.ndim - 1))
+
+    def macro_round(Y, r):
+        s0 = 3 * r
+        for e in classes:
+            Y = step(Y, s0 + e, e)
+        return _pin_lanes(Y, carry_spec), ()
+
+    Y, _ = jax.lax.scan(macro_round, _pin_lanes(Y, carry_spec),
+                        jnp.arange(R, dtype=jnp.int32))
+    return Y.reshape((b * Y.shape[1],) + Y.shape[2:])[:m]
+
+
+def dptree_allreduce(x: jax.Array, axis_name: str, p: int, *,
+                     num_blocks: int = 16,
+                     op: Op = jnp.add, op_rev: Op | None = None,
+                     topo: TreeTopology | None = None,
+                     carry_spec=None) -> jax.Array:
+    """The paper's doubly-pipelined, dual-root reduction-to-all (Algorithm 1).
+
+    ``x`` is this device's flat vector; returns the elementwise reduction over
+    all ``p`` devices of ``axis_name``, on every device. ``op`` must be
+    associative; for non-commutative operators pass ``op_rev`` (same operator —
+    the engine applies arguments in rank order; ``op_rev(a, b)`` must equal the
+    operator applied as ``a (.) b``, which for plain functions is just ``op``).
+    """
+    topo = topo or build_dual_tree(p)
+    nb = max(1, min(int(num_blocks), x.shape[0]))
+    return _tree_allreduce(x, axis_name, topo, nb, op, op_rev, carry_spec)
+
+
+def sptree_allreduce(x: jax.Array, axis_name: str, p: int, *,
+                     num_blocks: int = 16,
+                     op: Op = jnp.add, op_rev: Op | None = None,
+                     topo: TreeTopology | None = None,
+                     carry_spec=None) -> jax.Array:
+    """Single doubly-pipelined binary tree (paper §1.2 remark): one tree over
+    all p ranks, latency ``4h`` instead of ``4h-3``, but the root performs at
+    most two reductions per round."""
+    topo = topo or build_single_tree(p)
+    nb = max(1, min(int(num_blocks), x.shape[0]))
+    return _tree_allreduce(x, axis_name, topo, nb, op, op_rev, carry_spec)
+
+
+# --------------------------------------------------------------------------
+# User-Allreduce1: pipelined binary-tree reduce followed by pipelined bcast.
+# Period-2 schedules; sends to the parent overlap receives from a child in the
+# same step (different partners — MPI_Sendrecv-style), so one permutation per
+# step suffices in each phase.
+# --------------------------------------------------------------------------
+
+def _phase_classes(p, parent, key, roots):
+    cls = [[], []]
+    for i in range(p):
+        pa = int(parent[i])
+        if pa == NO_NODE:
+            continue
+        cls[int(key[i]) % 2].append((i, pa))
+    return tuple(tuple(c) for c in cls)
+
+
+def redbcast_allreduce(x: jax.Array, axis_name: str, p: int, *,
+                       num_blocks: int = 16,
+                       op: Op = jnp.add,
+                       topo: TreeTopology | None = None) -> jax.Array:
+    """Pipelined reduce-to-root then pipelined broadcast (User-Allreduce1)."""
+    topo = topo or build_single_tree(p)
+    if p == 1:
+        return x
+    b = max(1, min(int(num_blocks), x.shape[0]))
+    Y, m = _blockify(x, b)
+
+    i = jax.lax.axis_index(axis_name)
+    dep_np = topo.depth
+    dmax = topo.max_depth
+
+    # ---------------- reduce phase (period 2, up-traffic only) -----------
+    # phi1 follows the same recursion as the dual-root schedule.
+    phi1_np = np.zeros(p, np.int32)
+    stack = [(topo.roots[0], 2 * dmax)]
+    while stack:
+        n, v = stack.pop()
+        phi1_np[n] = v
+        if topo.child0[n] != NO_NODE:
+            stack.append((int(topo.child0[n]), v - 2))
+        if topo.child1[n] != NO_NODE:
+            stack.append((int(topo.child1[n]), v - 1))
+    up_cls = _phase_classes(p, topo.parent, phi1_np, topo.roots)
+    # child->parent edges, classed by phi1(child) mod 2
+    phi1 = _const(phi1_np, i)
+    has_c0 = _const(topo.child0 != NO_NODE, i)
+    has_c1 = _const(topo.child1 != NO_NODE, i)
+    has_par = _const(topo.parent != NO_NODE, i)
+    S1 = int(phi1_np[topo.roots[0]]) + 2 * b
+    R1 = -(-S1 // 2)
+
+    def take(Y, idx):
+        return jax.lax.dynamic_slice_in_dim(
+            Y, jnp.clip(idx, 0, b - 1), 1, axis=0)[0]
+
+    def rstep(Y, s, e):
+        rel = s - phi1
+        even = jnp.mod(rel, 2) == 0
+        j_send = jnp.floor_divide(rel - 2, 2)       # send up at phi1+2j+2
+        j_r0 = jnp.floor_divide(rel, 2)             # recv child0 at phi1+2j
+        j_r1 = jnp.floor_divide(rel - 1, 2)         # recv child1 at phi1+2j+1
+        up_out = take(Y, j_send)
+        t = jax.lax.ppermute(up_out, axis_name, up_cls[e]) if up_cls[e] \
+            else jnp.zeros_like(up_out)
+        jr = jnp.where(even, j_r0, j_r1)
+        ok = (((even & has_c0) | (~even & has_c1))
+              & (jr >= 0) & (jr < b))
+        cur = take(Y, jr)
+        val = jnp.where(ok, op(t, cur), cur)
+        ci = jnp.clip(jr, 0, b - 1)
+        return jax.lax.dynamic_update_slice(Y, val[None],
+                                            (ci,) + (0,) * (Y.ndim - 1))
+
+    def rround(Y, r):
+        for e in (0, 1):
+            if up_cls[e]:
+                Y = rstep(Y, 2 * r + e, e)
+        return _pin_lanes(Y), ()
+
+    Y, _ = jax.lax.scan(rround, _pin_lanes(Y),
+                        jnp.arange(R1, dtype=jnp.int32))
+
+    # ---------------- broadcast phase (period 2, down-traffic only) ------
+    sig_np = np.zeros(p, np.int32)
+    stack = [(topo.roots[0], 0)]
+    while stack:
+        n, v = stack.pop()
+        sig_np[n] = v
+        if topo.child0[n] != NO_NODE:
+            stack.append((int(topo.child0[n]), v + 1))
+        if topo.child1[n] != NO_NODE:
+            stack.append((int(topo.child1[n]), v + 2))
+    # edge (i -> c0) active at sigma(i)+2j; (i -> c1) at sigma(i)+2j+1.
+    dn_cls = [[], []]
+    for n in range(p):
+        for c, off in ((topo.child0[n], 0), (topo.child1[n], 1)):
+            if c != NO_NODE:
+                dn_cls[(int(sig_np[n]) + off) % 2].append((n, int(c)))
+    dn_cls = tuple(tuple(c) for c in dn_cls)
+    sig = _const(sig_np, i)
+    S2 = int(sig_np.max()) + 2 * b
+    R2 = -(-S2 // 2)
+
+    def bstep(Y, s, e):
+        rel = s - sig
+        even = jnp.mod(rel, 2) == 0
+        j_s0 = jnp.floor_divide(rel, 2)             # send c0 at sigma+2j
+        j_s1 = jnp.floor_divide(rel - 1, 2)         # send c1 at sigma+2j+1
+        j_rcv = jnp.floor_divide(rel + 1, 2)        # recv parent at sigma+2j-1
+        out = take(Y, jnp.where(even, j_s0, j_s1))
+        t = jax.lax.ppermute(out, axis_name, dn_cls[e]) if dn_cls[e] \
+            else jnp.zeros_like(out)
+        ok = has_par & (jnp.mod(rel, 2) == 1) & (j_rcv >= 0) & (j_rcv < b)
+        ci = jnp.clip(j_rcv, 0, b - 1)
+        val = jnp.where(ok, t, take(Y, j_rcv))
+        return jax.lax.dynamic_update_slice(Y, val[None],
+                                            (ci,) + (0,) * (Y.ndim - 1))
+
+    def bround(Y, r):
+        for e in (0, 1):
+            if dn_cls[e]:
+                Y = bstep(Y, 2 * r + e, e)
+        return _pin_lanes(Y), ()
+
+    Y, _ = jax.lax.scan(bround, _pin_lanes(Y),
+                        jnp.arange(R2, dtype=jnp.int32))
+    return Y.reshape((b * Y.shape[1],) + Y.shape[2:])[:m]
+
+
+# --------------------------------------------------------------------------
+# Bidirectional ring reduce-scatter + all-gather (the TPU-native baseline).
+# --------------------------------------------------------------------------
+
+def ring_allreduce(x: jax.Array, axis_name: str, p: int, *,
+                   op: Op = jnp.add, bidirectional: bool = True) -> jax.Array:
+    """Ring allreduce; with ``bidirectional=True`` the vector is split in two
+    halves circulating in opposite directions, halving the beta term on
+    full-duplex links."""
+    if p == 1:
+        return x
+    m = x.shape[0]
+    trail = x.shape[1:]
+    chunk = -(-m // p)
+    pad = p * chunk - m
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + trail, x.dtype)], axis=0)
+    X = x.reshape((p, chunk) + trail)
+    i = jax.lax.axis_index(axis_name)
+    fwd = [(k, (k + 1) % p) for k in range(p)]
+    bwd = [((k + 1) % p, k) for k in range(p)]
+
+    halves = ([X[:, :chunk // 2], X[:, chunk // 2:]]
+              if (bidirectional and chunk >= 2) else [X])
+    dirs = [fwd, bwd][: len(halves)]
+    signs = [1, -1][: len(halves)]
+    out_halves = []
+    for H, perm, sg in zip(halves, dirs, signs):
+        def rs_step(H, t):
+            send_idx = jnp.mod(i - sg * t, p)
+            buf = jax.lax.dynamic_slice_in_dim(H, send_idx, 1, axis=0)[0]
+            buf = jax.lax.ppermute(buf, axis_name, perm)
+            recv_idx = jnp.mod(i - sg * (t + 1), p)
+            cur = jax.lax.dynamic_slice_in_dim(H, recv_idx, 1, axis=0)[0]
+            return jax.lax.dynamic_update_slice(
+                H, op(cur, buf)[None],
+                (recv_idx,) + (0,) * (H.ndim - 1)), ()
+        H, _ = jax.lax.scan(lambda h, t: (_pin_lanes(rs_step(h, t)[0]), ()),
+                            _pin_lanes(H), jnp.arange(p - 1, dtype=jnp.int32))
+
+        def ag_step(H, t):
+            send_idx = jnp.mod(i + sg * (1 - t), p)
+            buf = jax.lax.dynamic_slice_in_dim(H, send_idx, 1, axis=0)[0]
+            buf = jax.lax.ppermute(buf, axis_name, perm)
+            recv_idx = jnp.mod(i - sg * t, p)
+            return jax.lax.dynamic_update_slice(
+                H, buf[None], (recv_idx,) + (0,) * (H.ndim - 1)), ()
+        H, _ = jax.lax.scan(lambda h, t: (_pin_lanes(ag_step(h, t)[0]), ()),
+                            _pin_lanes(H), jnp.arange(p - 1, dtype=jnp.int32))
+        out_halves.append(H)
+    X = jnp.concatenate(out_halves, axis=1) if len(out_halves) > 1 else out_halves[0]
+    return X.reshape((p * chunk,) + trail)[:m]

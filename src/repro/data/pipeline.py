@@ -1,0 +1,73 @@
+"""Deterministic, shardable, checkpointable synthetic data pipeline.
+
+Every batch is a pure function of ``(seed, step, shard)`` via counter-based
+threefry — so (a) any worker can re-materialize any batch (elastic restarts
+re-shard the same global stream), (b) "checkpointing the iterator" is just
+recording the step counter, and (c) multi-host loaders need no coordination.
+
+The synthetic stream is Zipf-distributed token ids with a learnable marker
+structure (token ``t+1`` repeats token ``t`` with prob ~0.25) so small models
+show a clearly decreasing loss — useful for the e2e convergence test.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DataConfig", "SyntheticLM", "build_batches"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+
+
+class SyntheticLM:
+    """Stateless-indexable LM dataset: ``batch_at(step, shard, n_shards)``."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        # Zipf-ish cdf over vocab, built once on host
+        ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+        probs = ranks ** (-cfg.zipf_a)
+        self._cdf = jnp.asarray(np.cumsum(probs / probs.sum()),
+                                dtype=jnp.float32)
+
+    def batch_at(self, step: int, shard: int = 0, n_shards: int = 1) -> dict:
+        cfg = self.cfg
+        assert cfg.global_batch % n_shards == 0
+        bs = cfg.global_batch // n_shards
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step), shard)
+        k1, k2 = jax.random.split(key)
+        u = jax.random.uniform(k1, (bs, cfg.seq_len + 1))
+        toks = jnp.searchsorted(self._cdf, u).astype(jnp.int32)
+        toks = jnp.clip(toks, 0, cfg.vocab_size - 1)
+        # structure: with p=.25 copy the previous token (learnable bigram)
+        rep = jax.random.uniform(k2, (bs, cfg.seq_len + 1)) < 0.25
+        toks = jnp.where(rep, jnp.roll(toks, 1, axis=1), toks)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+@dataclasses.dataclass
+class IteratorState:
+    step: int = 0
+
+
+def build_batches(cfg: DataConfig, start_step: int = 0, shard: int = 0,
+                  n_shards: int = 1) -> Iterator[tuple]:
+    """Resumable batch iterator; yields (step, batch)."""
+    ds = SyntheticLM(cfg)
+    step = start_step
+    while True:
+        yield step, ds.batch_at(step, shard, n_shards)
+        step += 1

@@ -1,0 +1,56 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On the CPU container the kernels run in ``interpret=True`` mode (Pallas
+executes the kernel body in Python/XLA-CPU for correctness); on a real TPU the
+same call sites compile to Mosaic. ``interpret`` is auto-detected from the
+default backend so model code can call these unconditionally.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import block_combine, quantize
+from repro.kernels import ref as _ref
+
+__all__ = ["block_combine2", "block_combine3", "kv_quantize", "kv_dequantize",
+           "interpret_default"]
+
+
+@functools.cache
+def interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("op", "use_pallas"))
+def block_combine2(a, b, op: str = "add", use_pallas: bool = True):
+    if not use_pallas:
+        return _ref.combine2_ref(a, b, op=op)
+    return block_combine.combine2(a, b, op=op, interpret=interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("op", "use_pallas"))
+def block_combine3(a, b, c, op: str = "add", use_pallas: bool = True):
+    if not use_pallas:
+        return _ref.combine3_ref(a, b, c, op=op)
+    return block_combine.combine3(a, b, c, op=op, interpret=interpret_default())
+
+
+@jax.jit
+def kv_quantize(x):
+    """Quantize a (..., 128)-laned KV cache tensor to int8 + per-row scales."""
+    lead = x.shape[:-1]
+    mat = x.reshape(-1, 128)
+    q, s = quantize.quantize_int8(mat, interpret=interpret_default())
+    return q.reshape(*lead, 128), s.reshape(*lead, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype",))
+def kv_dequantize(q, s, dtype=jnp.bfloat16):
+    lead = q.shape[:-1]
+    out = quantize.dequantize_int8(q.reshape(-1, 128), s.reshape(-1, 1),
+                                   dtype=dtype, interpret=interpret_default())
+    return out.reshape(*lead, 128)

@@ -1,0 +1,83 @@
+"""Pallas TPU kernels: symmetric int8 (de)quantization with per-row scales.
+
+Used for (a) KV-cache compression in the serving path and (b) optional
+compressed payloads in the collective stack. Scales are per (ROWS x 128) tile
+row, computed in-kernel from the tile's absmax — one HBM pass for quantize,
+one for dequantize.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["quantize_int8", "dequantize_int8"]
+
+LANES = 128
+DEFAULT_ROWS = 256
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    q_ref[...] = q
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref, *, dtype_name: str):
+    q = q_ref[...].astype(jnp.float32)
+    o_ref[...] = (q * s_ref[...]).astype(o_ref.dtype)
+
+
+def _pad_rows(x: jax.Array, rows: int):
+    r, c = x.shape
+    n_tiles = max(1, -(-r // rows))
+    padded = n_tiles * rows
+    if padded != r:
+        x = jnp.concatenate([x, jnp.zeros((padded - r, c), x.dtype)])
+    return x, n_tiles
+
+
+def quantize_int8(x: jax.Array, *, rows: int = DEFAULT_ROWS,
+                  interpret: bool = False):
+    """x: (R, 128) float -> (q: (R,128) int8, scale: (R,1) float32)."""
+    assert x.ndim == 2 and x.shape[1] == LANES
+    r0 = x.shape[0]
+    x, n_tiles = _pad_rows(x, rows)
+    spec = pl.BlockSpec((rows, LANES), lambda i: (i, 0))
+    sspec = pl.BlockSpec((rows, 1), lambda i: (i, 0))
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        out_shape=(jax.ShapeDtypeStruct(x.shape, jnp.int8),
+                   jax.ShapeDtypeStruct((x.shape[0], 1), jnp.float32)),
+        grid=(n_tiles,),
+        in_specs=[spec],
+        out_specs=(spec, sspec),
+        interpret=interpret,
+    )(x)
+    return q[:r0], s[:r0]
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32, *,
+                    rows: int = DEFAULT_ROWS, interpret: bool = False):
+    """Inverse of :func:`quantize_int8`."""
+    assert q.ndim == 2 and q.shape[1] == LANES
+    r0 = q.shape[0]
+    q, n_tiles = _pad_rows(q, rows)
+    scale, _ = _pad_rows(scale, rows)
+    spec = pl.BlockSpec((rows, LANES), lambda i: (i, 0))
+    sspec = pl.BlockSpec((rows, 1), lambda i: (i, 0))
+    out = pl.pallas_call(
+        functools.partial(_dequant_kernel, dtype_name=jnp.dtype(dtype).name),
+        out_shape=jax.ShapeDtypeStruct(q.shape, dtype),
+        grid=(n_tiles,),
+        in_specs=[spec, sspec],
+        out_specs=spec,
+        interpret=interpret,
+    )(q, scale)
+    return out[:r0]

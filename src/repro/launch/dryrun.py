@@ -1,0 +1,255 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh) cell.
+
+MUST be imported/run before any other jax initialization — the two lines above
+create 512 placeholder host devices so ``jax.make_mesh`` can build the
+production meshes: (16,16)=256 chips single-pod and (2,16,16)=512 chips
+multi-pod. For every cell we record:
+
+* ``memory_analysis()``  — proves the program fits per-chip HBM,
+* ``cost_analysis()``    — raw HLO FLOPs/bytes (scan bodies counted once —
+  see analysis/flops.py for why the roofline uses the analytic model),
+* collective-op operand bytes parsed from the compiled HLO text, with
+  per-computation while-loop trip-count multipliers,
+* the three analytic roofline terms (compute/memory/collective).
+
+Usage:
+  python -m repro.launch.dryrun --cell <arch>:<shape>:<single|multi>  # one cell
+  python -m repro.launch.dryrun --all [--jobs 8] [--out results.json] # sweep
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import subprocess
+import sys
+import time
+from collections import Counter
+
+# --------------------------------------------------------------------------
+
+def run_cell(arch: str, shape: str, multi_pod: bool) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.analysis import flops as fl
+    from repro.analysis.roofline import parse_collective_bytes
+    from repro.configs.base import (SHAPES, get_config, get_parallel,
+                                    input_specs, supports_shape)
+    from repro.launch import step_fns
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import transformer as tf
+
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not supports_shape(arch, shape):
+        rec.update(status="skipped",
+                   reason="long_500k requires sub-quadratic attention")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    suite = SHAPES[shape]
+    cfg = get_config(arch)
+    cfg = dataclasses.replace(cfg, param_dtype=jnp.bfloat16)
+    if suite.kind == "decode" and cfg.n_kv_heads * cfg.hdim >= 2048:
+        # MHA-heavy archs (minicpm kv=36): int8 KV cache halves the
+        # dominant decode memory term (see EXPERIMENTS.md §Perf)
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    pcfg = get_parallel(arch)
+    n_chips = int(mesh.devices.size)
+    n_model = mesh.shape["model"]
+    dp = [a for a in ("pod", "data") if a in mesh.axis_names]
+
+    t0 = time.time()
+    if suite.kind == "train":
+        # microbatches of 1 sequence/chip bound the remat-saved activation
+        # footprint (EXPERIMENTS.md §Perf M5); clamp to the per-DP-rank batch
+        n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+        accum = max(1, min(16, suite.global_batch // n_dp))
+        step, sh = step_fns.make_train_step(cfg, pcfg, mesh, accum=accum)
+        zeros_p = jax.eval_shape(
+            lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+        p_abs = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(
+                l.shape, l.dtype, sharding=NamedSharding(mesh, s)),
+            zeros_p, sh["params"],
+            is_leaf=lambda v: hasattr(v, "shape") and not isinstance(v, dict))
+        zeros_o = jax.eval_shape(sh["opt_init"], zeros_p)
+        o_abs = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(
+                l.shape, l.dtype, sharding=NamedSharding(mesh, s)),
+            zeros_o, sh["opt"],
+            is_leaf=lambda v: hasattr(v, "shape") and not isinstance(v, dict))
+        bspec = sh["batch"]
+        b_abs = {k: jax.ShapeDtypeStruct(
+                     v.shape, v.dtype,
+                     sharding=NamedSharding(
+                         mesh, P(*((tuple(bspec) if bspec else ())
+                                   + (None,) * (v.ndim - 1)))))
+                 for k, v in input_specs(cfg, suite).items()}
+        lowered = step.lower(p_abs, o_abs, b_abs)
+    elif suite.kind == "prefill":
+        step, sh = step_fns.make_prefill_step(cfg, pcfg, mesh, suite)
+        zeros_p = jax.eval_shape(
+            lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+        p_abs = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(
+                l.shape, l.dtype, sharding=NamedSharding(mesh, s)),
+            zeros_p, sh["params"],
+            is_leaf=lambda v: hasattr(v, "shape") and not isinstance(v, dict))
+        bspec = sh["batch"]
+        b_abs = {k: jax.ShapeDtypeStruct(
+                     v.shape, v.dtype,
+                     sharding=NamedSharding(
+                         mesh, P(*((tuple(bspec) if bspec else ())
+                                   + (None,) * (v.ndim - 1)))))
+                 for k, v in input_specs(cfg, suite).items()}
+        lowered = step.lower(p_abs, b_abs)
+    else:  # decode
+        step, sh = step_fns.make_serve_step(cfg, pcfg, mesh, suite)
+        zeros_p = jax.eval_shape(
+            lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+        p_abs = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(
+                l.shape, l.dtype, sharding=NamedSharding(mesh, s)),
+            zeros_p, sh["params"],
+            is_leaf=lambda v: hasattr(v, "shape") and not isinstance(v, dict))
+        caches = tf.init_cache(cfg, suite.global_batch, suite.seq_len,
+                               abstract=True)
+        c_abs = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(
+                l.shape, l.dtype, sharding=NamedSharding(mesh, s)),
+            caches, sh["cache"],
+            is_leaf=lambda v: hasattr(v, "shape") and not isinstance(v, dict))
+        bspec = sh["batch"]
+        b_abs = {k: jax.ShapeDtypeStruct(
+                     v.shape, v.dtype,
+                     sharding=NamedSharding(
+                         mesh, P(*((tuple(bspec) if bspec else ())
+                                   + (None,) * (v.ndim - 1)))))
+                 for k, v in input_specs(cfg, suite).items()}
+        lowered = step.lower(p_abs, b_abs, c_abs)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    colls = parse_collective_bytes(hlo)
+    cost = fl.cell_cost(cfg, suite, n_chips, n_model, pcfg.dp_mode)
+    p_data = mesh.shape.get("data", 1)
+    p_pod = mesh.shape.get("pod", 1)
+    terms = fl.roofline_terms(cost, n_chips, p_data, p_pod, pcfg.dp_mode)
+
+    # donation aliases outputs into arguments on TPU; the CPU backend ignores
+    # donate_argnums, so arg+out double-counts there. The TPU-realistic
+    # footprint is max(arg, out) + temp.
+    per_chip_bytes = (max(mem.argument_size_in_bytes,
+                          mem.output_size_in_bytes)
+                      + mem.temp_size_in_bytes)
+    rec.update(
+        status="ok",
+        lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+        memory=dict(argument=mem.argument_size_in_bytes,
+                    output=mem.output_size_in_bytes,
+                    temp=mem.temp_size_in_bytes,
+                    per_chip_total=per_chip_bytes,
+                    fits_16GB=bool(per_chip_bytes < 16e9)),
+        cost_analysis_raw=dict(
+            flops=float(ca.get("flops", 0.0)),
+            bytes_accessed=float(ca.get("bytes accessed", 0.0))),
+        collectives=colls,
+        roofline=terms,
+        params_total=cfg.param_count(),
+        params_active=cfg.active_param_count(),
+    )
+    return rec
+
+
+# --------------------------------------------------------------------------
+
+def main():
+    from repro.configs.base import ARCHS, SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", help="arch:shape:single|multi")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=6)
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    if args.cell:
+        arch, shape, meshk = args.cell.split(":")
+        try:
+            rec = run_cell(arch, shape, meshk == "multi")
+        except Exception as e:  # a failing cell is a bug — record it loudly
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if meshk == "multi" else "16x16",
+                   "status": "error", "error": f"{type(e).__name__}: {e}"}
+        print(json.dumps(rec))
+        sys.exit(0 if rec["status"] in ("ok", "skipped") else 1)
+
+    if not args.all:
+        sys.exit("need --cell or --all")
+
+    cells = [(a, s, m) for a in ARCHS for s in SHAPES for m in ("single",
+                                                                "multi")]
+    done = {}
+    if os.path.exists(args.out):
+        for r in json.load(open(args.out)):
+            done[(r["arch"], r["shape"], r["mesh"])] = r
+    pending = [(a, s, m) for (a, s, m) in cells
+               if ((a, s, "2x16x16" if m == "multi" else "16x16") not in done
+                   or done[(a, s, "2x16x16" if m == "multi" else "16x16")]
+                   ["status"] == "error")]
+    print(f"{len(pending)} cells to run ({len(done)} cached)")
+    procs: dict = {}
+    results = dict(done)
+
+    def launch(cell):
+        a, s, m = cell
+        return subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.dryrun", "--cell",
+             f"{a}:{s}:{m}"],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+            env={**os.environ, "PYTHONPATH": "src"})
+
+    queue = list(pending)
+    while queue or procs:
+        while queue and len(procs) < args.jobs:
+            cell = queue.pop(0)
+            procs[launch(cell)] = cell
+        for pr in list(procs):
+            if pr.poll() is None:
+                continue
+            cell = procs.pop(pr)
+            out, err = pr.communicate()
+            try:
+                rec = json.loads(out.strip().splitlines()[-1])
+            except Exception:
+                rec = {"arch": cell[0], "shape": cell[1],
+                       "mesh": "2x16x16" if cell[2] == "multi" else "16x16",
+                       "status": "error",
+                       "error": (err or out)[-2000:]}
+            results[(rec["arch"], rec["shape"], rec["mesh"])] = rec
+            n_ok = sum(1 for r in results.values()
+                       if r["status"] in ("ok", "skipped"))
+            print(f"[{n_ok}/{len(cells)}] {rec['arch']}:{rec['shape']}:"
+                  f"{rec['mesh']} -> {rec['status']}"
+                  + (f" ({rec.get('error', '')[:120]})"
+                     if rec["status"] == "error" else ""))
+            with open(args.out, "w") as f:
+                json.dump(list(results.values()), f, indent=1)
+        time.sleep(0.3)
+    bad = [r for r in results.values() if r["status"] == "error"]
+    print(f"done: {len(results) - len(bad)} ok/skipped, {len(bad)} errors")
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

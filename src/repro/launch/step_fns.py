@@ -1,0 +1,307 @@
+"""Train/serve step builders: where the paper's collective meets the models.
+
+Two data-parallel regimes (see DESIGN.md §3):
+
+* ``manual``  — gradient computation + the paper's collective run inside a
+  *partial-manual* ``shard_map`` (manual over ('pod','data'), GSPMD-auto over
+  'model'). Per-replica gradients are reduced explicitly with the
+  doubly-pipelined dual-root tree, hierarchically: dual-tree allreduce over
+  the 16-way 'data' axis, then the dual-root exchange over the 2-way 'pod'
+  axis (which *is* the paper's two-roots structure). The optimizer update
+  runs OUTSIDE the manual region with ZeRO-1 moment sharding: Adam's mu/nu
+  shard over (data x model) per leaf via GSPMD while bf16 params keep their
+  TP-only specs (XLA re-broadcasts updated leaves across 'data').
+* ``fsdp``    — parameters and optimizer state shard over ('data','model')
+  via GSPMD (the >50B MoE regime, where the partitioner reduce-scatters
+  gradients); in multi-pod meshes cross-pod gradient sync still runs the
+  paper's collective manually over the 'pod' axis (``pod_sync='dptree'``).
+
+Scalar training metrics are reduced with the b=1 dual-root tree in both modes —
+the latency-bound regime where the tree beats ring by O(p/log p).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ParallelConfig, ShapeSuite
+from repro.core.collectives import (CollectiveConfig, all_reduce,
+                                    bucketed_all_reduce)
+from repro.models import transformer as tf
+from repro.optim.optimizers import Optimizer
+
+# --------------------------------------------------------------------------
+# sharding helpers
+# --------------------------------------------------------------------------
+
+def _dp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _sanitize(specs, zeros, mesh) -> Any:
+    """Drop sharding entries whose dim isn't divisible by the axis group
+    (e.g. seamless's vocab 256206 over a 16-way model axis)."""
+    def fix(spec, leaf):
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        outs = []
+        for d, e in enumerate(entries[:leaf.ndim]):
+            if e is None:
+                outs.append(None)
+                continue
+            names = e if isinstance(e, tuple) else (e,)
+            n = int(np.prod([mesh.shape[a] for a in names]))
+            outs.append(e if leaf.shape[d] % n == 0 else None)
+        return P(*outs)
+
+    return jax.tree.map(fix, specs, zeros, is_leaf=lambda v: isinstance(v, P))
+
+
+def model_pspecs(cfg, mesh=None) -> Any:
+    specs = tf.param_pspecs(cfg)
+    if mesh is None:
+        return specs
+    zeros = jax.eval_shape(lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+    return _sanitize(specs, zeros, mesh)
+
+
+def fsdp_pspecs(cfg, mesh, data_axis: str = "data") -> Any:
+    """Add 'data' sharding on the largest free divisible dim of each param."""
+    zeros = jax.eval_shape(lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+    base = _sanitize(tf.param_pspecs(cfg), zeros, mesh)
+    n_data = mesh.shape[data_axis]
+
+    def add(spec, leaf):
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        cands = [(leaf.shape[d], d) for d in range(leaf.ndim)
+                 if entries[d] is None and leaf.shape[d] % n_data == 0
+                 and leaf.shape[d] >= 2 * n_data]
+        if cands:
+            entries[max(cands)[1]] = data_axis
+        return P(*entries)
+
+    return jax.tree.map(add, base, zeros, is_leaf=lambda v: isinstance(v, P))
+
+
+def opt_pspecs(param_specs, opt_state_like) -> Any:
+    """Optimizer-state specs: moments mirror the params; counters replicate."""
+    def pick(k, sub):
+        if k in ("mu", "nu", "m"):
+            return param_specs
+        return jax.tree.map(lambda _: P(), sub)
+    return {k: pick(k, v) for k, v in opt_state_like.items()}
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda v: isinstance(v, P))
+
+
+def _reduce_metrics(vec, axes, sizes, collective: CollectiveConfig):
+    ptot = 1
+    cfg1 = CollectiveConfig(method="dptree", num_blocks=1,
+                            comm_model=collective.comm_model)
+    for ax in axes:
+        vec = all_reduce(vec, ax, sizes[ax], cfg1)
+        ptot *= sizes[ax]
+    return vec / ptot
+
+
+# --------------------------------------------------------------------------
+# train step
+# --------------------------------------------------------------------------
+
+def zero1_opt_pspecs(cfg, mesh, param_specs) -> Any:
+    """ZeRO-1 moment sharding: Adam's mu/nu shard over (data x model) per
+    leaf (GSPMD partitions the elementwise update); the params keep their
+    model-only specs and XLA re-broadcasts updated leaves across 'data'.
+    With bf16 params + fp32 moments this is the DeepSpeed-stage-1 memory
+    profile without a separate fp32 master copy (documented trade-off)."""
+    moment_specs = fsdp_pspecs(cfg, mesh)
+    return moment_specs
+
+
+def make_train_step(cfg, pcfg: ParallelConfig, mesh,
+                    optimizer: Optimizer | None = None, accum: int = 1):
+    """Returns (jitted_step, shardings):
+    step(params, opt_state, batch) -> (params, opt_state, metrics_vec) with
+    metrics_vec = [loss, ce, aux, grad_norm] replicated and DP-averaged.
+    ``accum`` > 1 splits the local batch into microbatches (gradient
+    accumulation bounds the remat-saved activation footprint).
+    """
+    if optimizer is None:
+        from repro.optim.optimizers import adamw, cosine_schedule
+        optimizer = adamw(cosine_schedule(3e-4, 100, 10000))
+    dp = _dp_axes(mesh)
+    manual = dp if pcfg.dp_mode == "manual" else tuple(
+        a for a in dp if a == "pod" and pcfg.pod_sync == "dptree")
+    sizes = {a: mesh.shape[a] for a in mesh.axis_names}
+    ptot = int(np.prod([sizes[a] for a in manual])) if manual else 1
+    pspecs = (model_pspecs(cfg, mesh) if pcfg.dp_mode == "manual"
+              else fsdp_pspecs(cfg, mesh))
+    zeros_p = jax.eval_shape(lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+
+    def _value_and_grads(params, batch):
+        vg = jax.value_and_grad(
+            lambda p, mb: tf.loss_fn(p, cfg, mb), has_aux=True)
+        if accum == 1:
+            return vg(params, batch)
+        mbs = jax.tree.map(
+            lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+            batch)
+
+        def mstep(carry, mb):
+            lacc, cacc, aacc, gacc = carry
+            (loss, mets), g = vg(params, mb)
+            gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                gacc, g)
+            return (lacc + loss, cacc + mets["ce"], aacc + mets["aux"],
+                    gacc), ()
+
+        g0 = jax.tree.map(lambda q: jnp.zeros(q.shape, jnp.float32), params)
+        z = jnp.zeros((), jnp.float32)
+        (loss, ce, aux, gacc), _ = jax.lax.scan(mstep, (z, z, z, g0), mbs)
+        grads = jax.tree.map(lambda g, q: (g / accum).astype(q.dtype),
+                             gacc, params)
+        return (loss / accum, {"ce": ce / accum, "aux": aux / accum}), grads
+
+    def grad_body(params, batch):
+        """Inside the partial-manual region: local grads + the paper's
+        hierarchical pipelined allreduce ('data' dual-tree, then the
+        dual-root 'pod' exchange). Returns replicated, averaged grads."""
+        from repro.models.layers import mesh_ctx
+        with mesh_ctx(mesh):
+            return _grad_body_inner(params, batch)
+
+    def _grad_body_inner(params, batch):
+        (loss, metrics), grads = _value_and_grads(params, batch)
+        if manual:
+            for ax in (a for a in ("data", "pod") if a in manual):
+                grads = bucketed_all_reduce(grads, ax, sizes[ax],
+                                            pcfg.collective,
+                                            leaf_specs=pspecs)
+            grads = jax.tree.map(lambda g: g / ptot, grads)
+        vec = jnp.stack([loss, metrics["ce"],
+                         metrics["aux"]]).astype(jnp.float32)
+        if manual:
+            vec = _reduce_metrics(vec, manual, sizes, pcfg.collective)
+        return grads, vec
+
+    if manual:
+        bspec = P(manual if len(manual) > 1 else manual[0])
+        grad_fn = jax.shard_map(
+            grad_body, mesh=mesh, in_specs=(P(), bspec),
+            out_specs=(P(), P()), axis_names=set(manual), check_vma=False)
+    else:
+        grad_fn = grad_body
+
+    def body(params, opt_state, batch):
+        grads, vec = grad_fn(params, batch)
+        new_params, new_opt, om = optimizer.update(grads, opt_state, params)
+        vec = jnp.concatenate([vec, om["grad_norm"][None]])
+        return new_params, new_opt, vec
+
+    # optimizer state shards over (data x model) in the auto domain (ZeRO-1)
+    zeros_o = jax.eval_shape(optimizer.init, zeros_p)
+    mspecs = zero1_opt_pspecs(cfg, mesh, pspecs) if pcfg.zero1 else pspecs
+    ospecs = opt_pspecs(mspecs, zeros_o)
+    in_sh = (_named(mesh, pspecs), _named(mesh, ospecs), None)
+    out_sh = (_named(mesh, pspecs), _named(mesh, ospecs),
+              NamedSharding(mesh, P()))
+    step = jax.jit(body, in_shardings=in_sh, out_shardings=out_sh,
+                   donate_argnums=(0, 1))
+    shardings = {"params": pspecs, "opt": ospecs,
+                 "batch": P(dp if dp else None), "opt_init": optimizer.init}
+    return step, shardings
+
+
+# --------------------------------------------------------------------------
+# prefill + serve (decode) steps
+# --------------------------------------------------------------------------
+
+def make_prefill_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite):
+    """Full-sequence forward + last-position logits (serving prefill proxy;
+    see EXPERIMENTS.md §Dry-run for the KV-cache-materialization caveat)."""
+    pspecs = (fsdp_pspecs(cfg, mesh) if pcfg.dp_mode == "fsdp"
+              else model_pspecs(cfg, mesh))
+
+    def body(params, inputs):
+        from repro.models.layers import mesh_ctx
+        with mesh_ctx(mesh):
+            hs, _ = tf.forward(params, cfg, inputs)
+            return tf.unembed(params, cfg,
+                              hs[:, -1:]).astype(jnp.float32)[:, 0]
+
+    dp = _dp_axes(mesh)
+    step = jax.jit(body, in_shardings=(_named(mesh, pspecs), None),
+                   out_shardings=NamedSharding(mesh, P(dp)))
+    return step, {"params": pspecs, "batch": P(dp)}
+
+
+def cache_pspecs(cfg, mesh, batch: int, max_len: int = 8) -> Any:
+    """Sharding for the stacked KV/state caches.
+
+    Shard batch over the DP axes when divisible; otherwise (long-context B=1)
+    shard the cache length over ('data','model') — split-KV decode, where
+    GSPMD reduces the attention partials across shards.
+    """
+    dp = _dp_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    shard_batch = bool(dp) and batch % n_dp == 0 and batch >= n_dp
+    caches = tf.init_cache(cfg, batch, max_len, abstract=True)
+
+    def spec(leaf):
+        nd = leaf.ndim
+        entries = [None] * nd
+        if nd >= 3 and shard_batch:
+            entries[1] = dp if len(dp) > 1 else dp[0]
+        if nd >= 3:
+            cand_groups = ([("model",)] if shard_batch
+                           else [("data", "model"), ("model",), ("data",)])
+            for cand in cand_groups:
+                if not all(a in mesh.axis_names for a in cand):
+                    continue
+                n = int(np.prod([mesh.shape[a] for a in cand]))
+                if leaf.shape[2] % n == 0 and leaf.shape[2] >= n:
+                    entries[2] = cand if len(cand) > 1 else cand[0]
+                    break
+        return P(*entries)
+
+    return jax.tree.map(spec, caches)
+
+
+def make_serve_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite):
+    """Returns (jitted_step, shardings):
+    step(params, inputs, caches) -> (logits, new_caches)."""
+    pspecs = (fsdp_pspecs(cfg, mesh) if pcfg.dp_mode == "fsdp"
+              else model_pspecs(cfg, mesh))
+    cspecs = cache_pspecs(cfg, mesh, suite.global_batch, suite.seq_len)
+    dp = _dp_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    shard_batch = dp and suite.global_batch % max(n_dp, 1) == 0 \
+        and suite.global_batch >= n_dp
+    bspec = P(dp if len(dp) > 1 else (dp[0] if dp else None)) \
+        if shard_batch else P(None)
+
+    def body(params, inputs, caches):
+        from repro.models.layers import mesh_ctx
+        inputs = dict(inputs)
+        memory = inputs.pop("memory", None)
+        with mesh_ctx(mesh):
+            logits, new_caches = tf.decode_step(params, cfg, inputs, caches,
+                                                memory)
+        return logits, new_caches
+
+    step = jax.jit(
+        body,
+        in_shardings=(_named(mesh, pspecs), None, _named(mesh, cspecs)),
+        out_shardings=(NamedSharding(mesh, bspec), _named(mesh, cspecs)),
+        donate_argnums=(2,))
+    return step, {"params": pspecs, "cache": cspecs, "batch": bspec}

@@ -1,0 +1,579 @@
+"""Config-driven transformer stack covering all assigned architectures.
+
+A model is a *layer pattern*: a period of layers, each a tuple of sublayers
+(``attn`` / ``xattn`` / ``mlp`` / ``moe`` / ``mamba`` / ``rwkv``). The full
+depth is ``n_periods`` repetitions of the pattern, executed under
+``lax.scan`` with parameters stacked along a leading period axis — this keeps
+the HLO size O(pattern) instead of O(depth), which is what makes the 512-chip
+dry-run compile in seconds even for 56-layer models.
+
+Examples:
+  dense (minicpm/granite/...):   period = [ (attn, mlp) ]
+  mixtral-8x22b:                 period = [ (attn{swa}, moe) ]
+  llama4-scout (iRoPE):          period = [ (attn{chunk,rope}, moe) x3,
+                                            (attn{global,norope}, moe) ]
+  jamba (1:7 attn:mamba, moe/2): period of 8, attn at index 4, moe on odd
+  rwkv6:                         period = [ (rwkv,) ]  (block includes FFN)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.layers import Params, maybe_shard
+
+# --------------------------------------------------------------------------
+# configuration
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoESettings:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    impl: str = "dispatch"          # 'dispatch' (sort-based) | 'masked'
+
+
+@dataclasses.dataclass(frozen=True)
+class SubSpec:
+    kind: str                        # attn|xattn|mlp|moe|mamba|rwkv
+    use_rope: bool = True
+    sliding_window: int | None = None
+    chunk_size: int | None = None
+    causal: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    pattern: tuple = (("attn", "mlp"),)   # tuple of layers; each layer is a
+                                          # tuple of SubSpec or kind-strings
+    head_dim: int | None = None
+    activation: str = "silu"
+    gated_mlp: bool = True
+    rope_theta: float = 10000.0
+    mrope_sections: tuple | None = None
+    moe: MoESettings | None = None
+    tie_embeddings: bool = True
+    input_mode: str = "tokens"            # tokens | embeds (stub frontends)
+    # encoder-decoder (seamless): encoder layers use its own pattern
+    n_enc_layers: int = 0
+    enc_pattern: tuple = ()
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    remat_policy: str = "full"      # full | dots (save matmul outputs)
+    kv_quant: bool = False          # int8 KV cache (+ per-row scales)
+    rwkv_head_dim: int = 64
+    mamba_d_state: int = 16
+
+    def __post_init__(self):
+        object.__setattr__(self, "pattern", _norm_pattern(self.pattern))
+        if self.enc_pattern:
+            object.__setattr__(self, "enc_pattern",
+                               _norm_pattern(self.enc_pattern))
+        assert self.n_layers % len(self.pattern) == 0, \
+            (self.name, self.n_layers, len(self.pattern))
+
+    @property
+    def hdim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    def attn_cfg(self, s: SubSpec) -> L.AttnConfig:
+        return L.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.hdim,
+            rope_theta=self.rope_theta, sliding_window=s.sliding_window,
+            chunk_size=s.chunk_size, causal=s.causal,
+            mrope_sections=self.mrope_sections,
+            use_rope=s.use_rope)
+
+    def rwkv_cfg(self) -> ssm.RWKVConfig:
+        return ssm.RWKVConfig(d_model=self.d_model,
+                              head_dim=self.rwkv_head_dim)
+
+    def mamba_cfg(self) -> ssm.MambaConfig:
+        return ssm.MambaConfig(d_model=self.d_model,
+                               d_state=self.mamba_d_state)
+
+    def param_count(self) -> int:
+        zeros = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), self))
+        return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(zeros))
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE counts top_k of n_experts)."""
+        total = self.param_count()
+        if self.moe is None:
+            return total
+        zeros = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), self))
+        inactive = 0
+        for lp in zeros["layers"]:
+            for sp in lp:
+                if "w_in" in sp and sp["w_in"].ndim == 4:  # stacked moe
+                    frac = 1.0 - self.moe.top_k / self.moe.n_experts
+                    inactive += sum(int(np.prod(sp[k].shape)) * frac
+                                    for k in ("w_in", "w_out", "w_gate")
+                                    if k in sp)
+        return int(total - inactive)
+
+
+def _norm_pattern(pattern):
+    out = []
+    for layer in pattern:
+        subs = []
+        for s in layer:
+            subs.append(SubSpec(kind=s) if isinstance(s, str) else s)
+        out.append(tuple(subs))
+    return tuple(out)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _sub_init(key, cfg: ModelConfig, s: SubSpec) -> Params:
+    dt = cfg.param_dtype
+    if s.kind in ("attn", "xattn"):
+        k1, k2 = jax.random.split(key)
+        return {"norm": L.rmsnorm_init(cfg.d_model),
+                **L.attn_init(k1, cfg.attn_cfg(s), dtype=dt)}
+    if s.kind == "mlp":
+        return {"norm": L.rmsnorm_init(cfg.d_model),
+                **L.mlp_init(key, cfg.d_model, cfg.d_ff, cfg.gated_mlp, dt)}
+    if s.kind == "moe":
+        m = cfg.moe
+        return {"norm": L.rmsnorm_init(cfg.d_model),
+                **L.moe_init(key, cfg.d_model, cfg.d_ff, m.n_experts,
+                             cfg.gated_mlp, dt)}
+    if s.kind == "mamba":
+        return {"norm": L.rmsnorm_init(cfg.d_model),
+                **ssm.mamba_init(key, cfg.mamba_cfg(), dt)}
+    if s.kind == "rwkv":
+        return ssm.rwkv_block_init(key, cfg.rwkv_cfg(), dt)
+    raise ValueError(s.kind)
+
+
+def _stack_layer_params(key, cfg: ModelConfig, pattern, n_periods) -> list:
+    """Per pattern position: params stacked over periods (leading axis)."""
+    out = []
+    for pos, layer in enumerate(pattern):
+        subs = []
+        for si, s in enumerate(layer):
+            keys = jax.random.split(
+                jax.random.fold_in(key, pos * 31 + si), n_periods)
+            ps = [_sub_init(k, cfg, s) for k in keys]
+            subs.append(jax.tree.map(lambda *xs: jnp.stack(xs), *ps))
+        out.append(tuple(subs))
+    return out
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "embed": L.dense_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                              scale=0.02, dtype=cfg.param_dtype),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+        "layers": _stack_layer_params(ks[1], cfg, cfg.pattern, cfg.n_periods),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.dense_init(ks[2], (cfg.d_model, cfg.vocab_size),
+                                    scale=0.02, dtype=cfg.param_dtype)
+    if cfg.n_enc_layers:
+        n_enc_periods = cfg.n_enc_layers // len(cfg.enc_pattern)
+        p["enc_layers"] = _stack_layer_params(ks[3], cfg, cfg.enc_pattern,
+                                              n_enc_periods)
+        p["enc_norm"] = L.rmsnorm_init(cfg.d_model)
+    return p
+
+
+PARAM_SPECS_BY_KIND = {
+    "attn": L.ATTN_SPECS, "xattn": L.ATTN_SPECS, "mlp": L.MLP_SPECS,
+    "moe": L.MOE_SPECS, "mamba": ssm.MAMBA_SPECS, "rwkv": ssm.RWKV_SPECS,
+}
+
+
+def param_pspecs(cfg: ModelConfig) -> Params:
+    """PartitionSpec pytree matching init_params (model/tensor parallelism)."""
+    def sub_spec(s: SubSpec, params_like):
+        table = PARAM_SPECS_BY_KIND[s.kind]
+        def pick(path, leaf):
+            d = table
+            for q in path:
+                d = d.get(q.key, {}) if isinstance(d, dict) else {}
+            base = d if isinstance(d, P) else P()
+            # stacked leading period axis
+            return P(*((None,) + tuple(base)))
+        return jax.tree_util.tree_map_with_path(pick, params_like)
+
+    zeros = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    specs: Params = {
+        # shard d_model: the token gather stays local; the tied unembed
+        # contraction reduces over the sharded dim (one psum per loss chunk)
+        "embed": P(None, "model"),
+        "final_norm": jax.tree.map(lambda _: P(), zeros["final_norm"]),
+        "layers": [tuple(sub_spec(s, sp) for s, sp in zip(layer, stacked))
+                   for layer, stacked in zip(cfg.pattern, zeros["layers"])],
+    }
+    if "unembed" in zeros:
+        specs["unembed"] = P(None, "model")
+    if "enc_layers" in zeros:
+        n_enc_p = cfg.n_enc_layers // len(cfg.enc_pattern)
+        specs["enc_layers"] = [
+            tuple(sub_spec(s, sp) for s, sp in zip(layer, stacked))
+            for layer, stacked in zip(cfg.enc_pattern, zeros["enc_layers"])]
+        specs["enc_norm"] = jax.tree.map(lambda _: P(), zeros["enc_norm"])
+    return specs
+
+
+# --------------------------------------------------------------------------
+# MoE implementations
+# --------------------------------------------------------------------------
+
+def _moe_masked(p, x, cfg: ModelConfig):
+    """Loop-over-experts with combine masking: simple, compile-safe, E/k x
+    FLOP overhead (the §Perf baseline)."""
+    m = cfg.moe
+    B, T, D = x.shape
+    E = m.n_experts
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    topv, topi = jax.lax.top_k(logits, m.top_k)
+    gates = jax.nn.softmax(topv, axis=-1)
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)
+    comb = jnp.einsum("btk,btke->bte", gates, onehot)
+
+    def expert(carry, ep):
+        acc = carry
+        w_in, w_out, w_gate, ce = ep
+        h = x @ w_in.astype(x.dtype)
+        if w_gate is not None:
+            h = L.act_fn(cfg.activation)(x @ w_gate.astype(x.dtype)) * h
+        else:
+            h = L.act_fn(cfg.activation)(h)
+        y = h @ w_out.astype(x.dtype)
+        return acc + y * ce[..., None].astype(x.dtype), ()
+
+    gate_stack = p.get("w_gate")
+    xs = (p["w_in"], p["w_out"],
+          gate_stack if gate_stack is not None else p["w_in"],
+          jnp.moveaxis(comb, -1, 0))
+    if gate_stack is None:
+        acc, _ = jax.lax.scan(
+            lambda c, s: expert(c, (s[0], s[1], None, s[3])), jnp.zeros_like(x), xs)
+    else:
+        acc, _ = jax.lax.scan(lambda c, s: expert(c, s), jnp.zeros_like(x), xs)
+    me = jnp.mean(jax.nn.softmax(logits, -1), axis=(0, 1))
+    ce_frac = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))
+    aux = E * jnp.sum(me * ce_frac)
+    return acc, aux
+
+
+def _moe_dispatch(p, x, cfg: ModelConfig):
+    """Sort-based capacity dispatch (per batch row): exact active-FLOPs.
+
+    Tokens are routed to ``(expert, slot)`` buffers of static capacity
+    ``C = ceil(T * k * cf / E)``; overflow drops (Switch-style). The batch dim
+    stays data-sharded; expert FFN weights shard their d_ff over 'model'.
+    """
+    m = cfg.moe
+    B, T, D = x.shape
+    E, k = m.n_experts, m.top_k
+    C = int(np.ceil(T * k * m.capacity_factor / E))
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    topv, topi = jax.lax.top_k(logits, k)               # (B,T,k)
+    gates = jax.nn.softmax(topv, axis=-1)
+
+    eid = topi.reshape(B, T * k)
+    gat = gates.reshape(B, T * k)
+    order = jnp.argsort(eid, axis=1, stable=True)       # (B,Tk)
+    seid = jnp.take_along_axis(eid, order, axis=1)
+    tok = order // k                                    # source token per slot
+    # rank within expert group
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(E)))(seid)
+    rank = jnp.arange(T * k)[None, :] - jnp.take_along_axis(
+        starts, seid, axis=1)
+    keep = rank < C
+    dest = jnp.where(keep, seid * C + rank, E * C)      # OOB sentinel drops
+    xg = jnp.take_along_axis(x, tok[..., None], axis=1)  # (B,Tk,D)
+    buf = jnp.zeros((B, E * C + 1, D), x.dtype).at[
+        jnp.arange(B)[:, None], dest].set(xg)[:, :-1]
+    # batch-sharding pins on the expert buffers keep the fsdp-auto layouts
+    # batch-parallel. NOTE: at microbatch sizes > 1/chip these pins trip an
+    # XLA SPMD gather-partitioner bug (invalid dynamic-slice); the dry-run
+    # uses accum=16 (1 seq/chip/microbatch) where they compile and save ~2x
+    # temp memory (see EXPERIMENTS.md §Perf).
+    buf = maybe_shard(buf.reshape(B, E, C, D), P(("pod", "data")))
+
+    h = jnp.einsum("becd,edf->becf", buf, p["w_in"].astype(x.dtype))
+    if "w_gate" in p:
+        g = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(x.dtype))
+        h = L.act_fn(cfg.activation)(g) * h
+    else:
+        h = L.act_fn(cfg.activation)(h)
+    h = maybe_shard(h, P(("pod", "data"), None, None, "model"))
+    y = jnp.einsum("becf,efd->becd", h, p["w_out"].astype(x.dtype))
+    y = maybe_shard(y, P(("pod", "data"), None, None, None))
+    y = y.reshape(B, E * C, D)
+    yg = jnp.take_along_axis(
+        jnp.concatenate([y, jnp.zeros((B, 1, D), y.dtype)], axis=1),
+        jnp.where(keep, dest, E * C)[..., None], axis=1)  # (B,Tk,D)
+    sg = jnp.take_along_axis(gat, order, axis=1)
+    contrib = yg * (sg * keep)[..., None].astype(y.dtype)
+    out = jnp.zeros_like(x).at[jnp.arange(B)[:, None], tok].add(contrib)
+
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)
+    me = jnp.mean(jax.nn.softmax(logits, -1), axis=(0, 1))
+    ce_frac = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))
+    aux = E * jnp.sum(me * ce_frac)
+    return out, aux
+
+
+# --------------------------------------------------------------------------
+# forward pass
+# --------------------------------------------------------------------------
+
+def _apply_sub(sp: Params, s: SubSpec, cfg: ModelConfig, x, positions,
+               memory, cache):
+    """One sublayer; returns (x, aux_loss, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    if s.kind == "rwkv":
+        x, new_cache = ssm.rwkv_block(sp, x, cfg.rwkv_cfg(), cache)
+        return x, aux, new_cache
+    h = L.rmsnorm(sp["norm"], x)
+    new_cache = cache
+    if s.kind == "attn":
+        acfg = cfg.attn_cfg(s)
+        if cache is not None:
+            o, kv = L.attention_decode(sp, acfg, h, cache, cache["pos"])
+            new_cache = {**kv, "pos": cache["pos"]}
+        else:
+            o = L.attention(sp, acfg, h, positions)
+    elif s.kind == "xattn":
+        o = L.cross_attention(sp, cfg.attn_cfg(s), h, memory)
+    elif s.kind == "mlp":
+        o = L.mlp(sp, h, cfg.activation)
+    elif s.kind == "moe":
+        fn = _moe_dispatch if cfg.moe.impl == "dispatch" else _moe_masked
+        o, aux = fn(sp, h, cfg)
+    elif s.kind == "mamba":
+        o, new_cache = ssm.mamba_block(sp, h, cfg.mamba_cfg(), cache)
+    else:
+        raise ValueError(s.kind)
+    return x + o, aux, new_cache
+
+
+def _run_stack(layer_params, pattern, cfg: ModelConfig, x, positions,
+               memory=None, caches=None):
+    """Scan over periods; returns (x, aux_sum, new_caches)."""
+    decode = caches is not None
+
+    # Per-SUBLAYER remat: a multi-layer pattern period (jamba's is 8 layers)
+    # would otherwise keep every sublayer's backward intermediates live at
+    # once inside the scanned body.
+    sub_fn = _apply_sub
+    if cfg.remat and not decode:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        sub_fn = jax.checkpoint(_apply_sub, prevent_cse=False, policy=policy,
+                                static_argnums=(1, 2))
+
+    def body(carry, xs):
+        h, aux = carry
+        params_slice, cache_slice = xs
+        new_cs = []
+        ci = 0
+        for pos, layer in enumerate(pattern):
+            for si, s in enumerate(layer):
+                has_cache = decode and s.kind in ("attn", "mamba", "rwkv")
+                c = cache_slice[ci] if has_cache else None
+                h, a, nc = sub_fn(params_slice[pos][si], s, cfg, h,
+                                  positions, memory, c)
+                aux = aux + a
+                if has_cache:
+                    new_cs.append(nc)
+                    ci += 1
+        return (h, aux), tuple(new_cs) if decode else ()
+
+    if not decode:
+        fwd_body = lambda c, lp: body(c, (lp, None))
+        (x, aux), _ = jax.lax.scan(
+            fwd_body, (x, jnp.zeros((), jnp.float32)), layer_params)
+        return x, aux, None
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (layer_params, caches))
+    return x, aux, new_caches
+
+
+def embed_inputs(params, cfg: ModelConfig, inputs) -> tuple:
+    if cfg.input_mode == "embeds":
+        x = inputs["embeds"].astype(cfg.compute_dtype)
+    else:
+        x = params["embed"].astype(cfg.compute_dtype)[inputs["tokens"]]
+    B, T = x.shape[:2]
+    positions = inputs.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None],
+                                     (B, T))
+    return x, positions
+
+
+def forward(params, cfg: ModelConfig, inputs) -> tuple:
+    """Full-sequence forward -> (final hidden states, aux loss)."""
+    x, positions = embed_inputs(params, cfg, inputs)
+    # NOTE: no constraint on the residual stream — it propagates into the
+    # MoE dispatch gather whose partitioning is fragile at high device counts
+    # and measurably worsens temp liveness; per-sublayer pins suffice.
+    memory = None
+    if cfg.n_enc_layers:
+        src = inputs["src_embeds"].astype(cfg.compute_dtype)
+        sp = jnp.broadcast_to(
+            jnp.arange(src.shape[1], dtype=jnp.int32)[None], src.shape[:2])
+        memory, _, _ = _run_stack(params["enc_layers"], cfg.enc_pattern, cfg,
+                                  src, sp)
+        memory = L.rmsnorm(params["enc_norm"], memory)
+    x, aux, _ = _run_stack(params["layers"], cfg.pattern, cfg, x, positions,
+                           memory)
+    return L.rmsnorm(params["final_norm"], x), aux
+
+
+def unembed(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    w = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    return x @ w.astype(x.dtype)
+
+
+def chunked_ce_loss(params, cfg: ModelConfig, x, labels,
+                    chunk: int = 512) -> jax.Array:
+    """Cross-entropy without materializing (B,T,V) at once: scan over
+    sequence chunks, vocab-sharded logits inside."""
+    B, T, D = x.shape
+    chunk = min(chunk, T)
+    n = T // chunk
+    rem = T - n * chunk
+
+    def one(xc, yc):
+        logits = unembed(params, cfg, xc).astype(jnp.float32)
+        logits = maybe_shard(logits, P(("pod", "data"), None, "model"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # label pick via iota-compare (a gather over the vocab-sharded dim
+        # trips XLA's SPMD gather partitioner at high device counts)
+        oh = jnp.arange(logits.shape[-1], dtype=yc.dtype) == yc[..., None]
+        ll = jnp.sum(jnp.where(oh, logits, 0.0), axis=-1)
+        return jnp.sum(lse - ll)
+
+    if n:
+        xm = x[:, :n * chunk].reshape(B, n, chunk, D)
+        ym = labels[:, :n * chunk].reshape(B, n, chunk)
+        tot, _ = jax.lax.scan(
+            lambda acc, s: (acc + one(s[0], s[1]), ()),
+            jnp.zeros((), jnp.float32),
+            (jnp.moveaxis(xm, 1, 0), jnp.moveaxis(ym, 1, 0)))
+    else:
+        tot = jnp.zeros((), jnp.float32)
+    if rem:
+        tot = tot + one(x[:, n * chunk:], labels[:, n * chunk:])
+    return tot / (B * T)
+
+
+def loss_fn(params, cfg: ModelConfig, inputs, aux_weight: float = 0.01):
+    x, aux = forward(params, cfg, inputs)
+    ce = chunked_ce_loss(params, cfg, x, inputs["labels"])
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# decode (serving)
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               kv_dtype=jnp.bfloat16, abstract: bool = False):
+    """Stacked (n_periods, ...) cache pytree matching the scan layout."""
+    KV, dh = cfg.n_kv_heads, cfg.hdim
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else \
+         (lambda s, d: jnp.zeros(s, d))
+
+    def sub_cache(s: SubSpec):
+        if s.kind == "attn":
+            S = max_len
+            if s.sliding_window is not None:
+                S = min(S, s.sliding_window)
+            if s.chunk_size is not None:
+                S = min(S, s.chunk_size)
+            if cfg.kv_quant:
+                return {"k": mk((batch, S, KV, dh), jnp.int8),
+                        "v": mk((batch, S, KV, dh), jnp.int8),
+                        "ks": mk((batch, S, KV, 1), jnp.float32),
+                        "vs": mk((batch, S, KV, 1), jnp.float32),
+                        "pos": mk((), jnp.int32)}
+            return {"k": mk((batch, S, KV, dh), kv_dtype),
+                    "v": mk((batch, S, KV, dh), kv_dtype),
+                    "pos": mk((), jnp.int32)}
+        if s.kind == "mamba":
+            spec = ssm.mamba_cache_spec(cfg.mamba_cfg(), batch,
+                                        cfg.compute_dtype)
+            return spec if abstract else jax.tree.map(
+                lambda sd: jnp.zeros(sd.shape, sd.dtype), spec)
+        if s.kind == "rwkv":
+            spec = ssm.rwkv_cache_spec(cfg.rwkv_cfg(), batch,
+                                       cfg.compute_dtype)
+            return spec if abstract else jax.tree.map(
+                lambda sd: jnp.zeros(sd.shape, sd.dtype), spec)
+        return None
+
+    def stack(tree):
+        if tree is None:
+            return None
+        return jax.tree.map(
+            lambda l: (jax.ShapeDtypeStruct((cfg.n_periods,) + l.shape, l.dtype)
+                       if abstract else jnp.tile(l[None], (cfg.n_periods,)
+                                                 + (1,) * l.ndim)), tree)
+
+    caches = []
+    for layer in cfg.pattern:
+        for s in layer:
+            c = stack(sub_cache(s))
+            if c is not None:
+                caches.append(c)
+    return tuple(caches)
+
+
+def decode_step(params, cfg: ModelConfig, inputs, caches, memory=None):
+    """One-token decode. inputs: {'tokens': (B,1)} or {'embeds': (B,1,D)},
+    plus optional 'positions'. Returns (logits (B,V), new_caches)."""
+    x, _ = embed_inputs(params, cfg, inputs)
+    x, _, new_caches = _run_stack(params["layers"], cfg.pattern, cfg, x,
+                                  None, memory, caches)
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = unembed(params, cfg, x)[:, -1]
+    return logits.astype(jnp.float32), advance_pos_stacked(new_caches)
+
+
+def advance_pos_stacked(caches):
+    """Scan outputs stack new caches over periods already; bump positions."""
+    return advance_pos(caches)
+
+
+def advance_pos(caches):
+    """Increment every attention cache position by one (post-step)."""
+    def bump(c):
+        if isinstance(c, dict) and "pos" in c:
+            return {**c, "pos": c["pos"] + 1}
+        return c
+    return tuple(bump(c) for c in caches)

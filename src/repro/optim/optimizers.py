@@ -1,0 +1,125 @@
+"""Optimizers and LR schedules (pure-functional, pytree-native).
+
+AdamW and SGD-momentum with global-norm clipping; schedules include cosine and
+WSD (warmup-stable-decay, the MiniCPM schedule). No external deps — the
+optimizer state is a plain pytree so checkpointing and the ZeRO-1 sharding
+path treat it like any other array tree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw", "sgdm", "Schedule", "wsd_schedule", "cosine_schedule",
+           "clip_by_global_norm", "Optimizer"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple]
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def adamw(lr: Callable[[jax.Array], jax.Array] | float,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, max_grad_norm: float = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, _step_unused=None):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        mu = jax.tree.map(
+            lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            grads, state["mu"])
+        nu = jax.tree.map(
+            lambda g, n: b2 * n + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            grads, state["nu"])
+
+        def upd(p, m, n):
+            u = (m / c1) / (jnp.sqrt(n / c2) + eps) \
+                + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "step": step}, \
+            {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init, update)
+
+
+def sgdm(lr: Callable | float, momentum: float = 0.9,
+         max_grad_norm: float = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, _=None):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+
+        m = jax.tree.map(lambda g, m_: momentum * m_ + g.astype(jnp.float32),
+                         grads, state["m"])
+        new_params = jax.tree.map(
+            lambda p, m_: (p.astype(jnp.float32) - lr_t * m_).astype(p.dtype),
+            params, m)
+        return new_params, {"m": m, "step": step}, \
+            {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------- schedules -----------------------------------
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def wsd_schedule(peak: float, warmup: int, stable: int, decay: int,
+                 floor_frac: float = 0.1) -> Schedule:
+    """MiniCPM's warmup-stable-decay: linear warmup, long flat stage, then a
+    fast exponential-ish decay to ``floor_frac * peak``."""
+    def fn(step):
+        s = step.astype(jnp.float32)
+        wu = peak * s / max(warmup, 1)
+        dec_t = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = peak * (floor_frac ** dec_t)
+        return jnp.where(s < warmup, wu,
+                         jnp.where(s < warmup + stable, peak, dec))
+    return fn
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor_frac: float = 0.1) -> Schedule:
+    def fn(step):
+        s = step.astype(jnp.float32)
+        wu = peak * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor_frac * peak + (1 - floor_frac) * peak * 0.5 \
+            * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup, wu, cos)
+    return fn

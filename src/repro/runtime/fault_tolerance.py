@@ -1,0 +1,129 @@
+"""Fault-tolerance runtime: failure detection, elastic re-meshing, straggler
+mitigation, and a restarting training-loop supervisor.
+
+On a real multi-host deployment the heartbeat transport is the cluster
+coordinator (GCS / k8s liveness); here it is injectable so tests can kill
+"hosts" deterministically. What matters architecturally:
+
+* the dual-tree topology is parametric in ``p`` — **any** surviving subset of
+  hosts re-forms a valid collective schedule in O(p) host time (the paper's
+  ``p = 2^h - 2`` balance is a special case, not a requirement);
+* the data pipeline is stateless-indexable, so a re-shard after shrink
+  replays the exact global batch stream;
+* checkpoints publish atomically, so restart-from-latest is always consistent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core.topology import build_dual_tree
+
+__all__ = ["HostFailure", "HeartbeatMonitor", "ElasticPlan", "plan_remesh",
+           "StragglerTuner", "run_with_restarts"]
+
+
+class HostFailure(RuntimeError):
+    """Raised (or injected) when a host misses its heartbeat deadline."""
+
+    def __init__(self, host: int, msg: str = ""):
+        self.host = host
+        super().__init__(msg or f"host {host} failed heartbeat")
+
+
+class HeartbeatMonitor:
+    """Tracks last-seen timestamps per host; ``check`` raises on timeout."""
+
+    def __init__(self, n_hosts: int, timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.n_hosts = n_hosts
+        self.timeout_s = timeout_s
+        self._clock = clock
+        now = clock()
+        self._last = {h: now for h in range(n_hosts)}
+
+    def beat(self, host: int):
+        self._last[host] = self._clock()
+
+    def check(self):
+        now = self._clock()
+        for h, t in self._last.items():
+            if now - t > self.timeout_s:
+                raise HostFailure(h)
+
+    def drop(self, host: int):
+        self._last.pop(host, None)
+        self.n_hosts -= 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """Result of re-planning after a membership change."""
+    survivors: tuple
+    new_p: int
+    topology_height: int
+    predicted_allreduce_s: float
+    new_num_blocks: int
+
+
+def plan_remesh(survivors, grad_bytes: float,
+                model: cm.CommModel = cm.TPU_V5E) -> ElasticPlan:
+    """Rebuild the collective plan for the surviving data-parallel ranks."""
+    p = len(survivors)
+    topo = build_dual_tree(p)
+    b = cm.optimal_blocks(p, grad_bytes, model, "dptree")
+    t = cm.dptree_time(p, grad_bytes, b, model)
+    return ElasticPlan(tuple(survivors), p, topo.max_depth, t, b)
+
+
+class StragglerTuner:
+    """Pipelined trees are bulk-synchronous per macro-round: one slow link
+    stretches every round. When observed step time exceeds the model's
+    prediction by ``threshold``, shrink the block count (fewer, larger rounds
+    amortize the straggler's per-round latency penalty alpha_hat)."""
+
+    def __init__(self, p: int, grad_bytes: float,
+                 model: cm.CommModel = cm.TPU_V5E, threshold: float = 1.5,
+                 window: int = 20):
+        self.p, self.grad_bytes, self.model = p, grad_bytes, model
+        self.threshold = threshold
+        self.window = window
+        self.times: list = []
+        self.num_blocks = cm.optimal_blocks(p, grad_bytes, model, "dptree")
+
+    def observe(self, step_time_s: float) -> int:
+        self.times.append(step_time_s)
+        if len(self.times) >= self.window:
+            med = float(np.median(self.times[-self.window:]))
+            pred = cm.dptree_time(self.p, self.grad_bytes, self.num_blocks,
+                                  self.model)
+            if pred > 0 and med > self.threshold * pred:
+                # effective alpha grew: re-solve with alpha_hat = alpha*ratio
+                ratio = med / pred
+                scaled = cm.CommModel(self.model.alpha * ratio,
+                                      self.model.beta, self.model.gamma)
+                self.num_blocks = max(1, cm.optimal_blocks(
+                    self.p, self.grad_bytes, scaled, "dptree"))
+                self.times.clear()
+        return self.num_blocks
+
+
+def run_with_restarts(loop_fn: Callable[[int], dict], max_restarts: int = 3):
+    """Supervise ``loop_fn(attempt)``; on HostFailure restart from the latest
+    checkpoint (loop_fn is responsible for restore-on-entry). Returns the
+    final result dict with a ``restarts`` count."""
+    attempt = 0
+    while True:
+        try:
+            out = loop_fn(attempt)
+            out["restarts"] = attempt
+            return out
+        except HostFailure:
+            attempt += 1
+            if attempt > max_restarts:
+                raise

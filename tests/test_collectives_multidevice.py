@@ -1,0 +1,174 @@
+"""Multi-device collective tests (8 virtual CPU devices via subprocess).
+
+The smoke tests must see 1 device (per the dry-run contract), so anything
+needing many devices runs in a subprocess with its own XLA_FLAGS.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(body: str, devices: int = 8, timeout: int = 560):
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+        import sys
+        sys.path.insert(0, {ROOT + '/src'!r})
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        mesh = jax.make_mesh(({devices},), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        p = {devices}
+    """) + textwrap.dedent(body)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=timeout)
+    assert r.returncode == 0, f"\nSTDOUT:{r.stdout[-2000:]}\nERR:{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_all_methods_match_sum():
+    run_sub("""
+        from repro.core.dptree import (dptree_allreduce, sptree_allreduce,
+                                       redbcast_allreduce, ring_allreduce)
+        rng = np.random.default_rng(42)
+        m = 103
+        X = rng.standard_normal((p, m)).astype(np.float32)
+        want = X.sum(0)
+        cases = [
+            ("dptree b=1", lambda x: dptree_allreduce(x, "data", p, num_blocks=1)),
+            ("dptree b=4", lambda x: dptree_allreduce(x, "data", p, num_blocks=4)),
+            ("dptree b=103", lambda x: dptree_allreduce(x, "data", p, num_blocks=103)),
+            ("sptree", lambda x: sptree_allreduce(x, "data", p, num_blocks=5)),
+            ("redbcast", lambda x: redbcast_allreduce(x, "data", p, num_blocks=4)),
+            ("ring", lambda x: ring_allreduce(x, "data", p)),
+            ("ring-uni", lambda x: ring_allreduce(x, "data", p, bidirectional=False)),
+        ]
+        for name, fn in cases:
+            body = lambda x: fn(x[0])[None]
+            sm = jax.shard_map(body, mesh=mesh, in_specs=P("data", None),
+                               out_specs=P("data", None))
+            out = np.asarray(jax.jit(sm)(jnp.asarray(X)))
+            for r in range(p):
+                np.testing.assert_allclose(out[r], want, rtol=2e-5, atol=2e-5,
+                                           err_msg=name)
+        print("ok")
+    """)
+
+
+def test_2d_row_pipelined_payloads():
+    run_sub("""
+        from repro.core.dptree import dptree_allreduce, ring_allreduce
+        rng = np.random.default_rng(0)
+        X = rng.standard_normal((p, 37, 8)).astype(np.float32)
+        want = X.sum(0)
+        for fn in (lambda x: dptree_allreduce(x, "data", p, num_blocks=5),
+                   lambda x: ring_allreduce(x, "data", p)):
+            body = lambda x: fn(x[0])[None]
+            sm = jax.shard_map(body, mesh=mesh, in_specs=P("data", None, None),
+                               out_specs=P("data", None, None))
+            out = np.asarray(jax.jit(sm)(jnp.asarray(X)))
+            for r in range(p):
+                np.testing.assert_allclose(out[r], want, rtol=2e-5, atol=2e-5)
+        print("ok")
+    """)
+
+
+def test_dptree_non_commutative_matches_simulator():
+    run_sub("""
+        from repro.core.dptree import dptree_allreduce
+        from repro.core.simulator import simulate_allreduce
+        rng = np.random.default_rng(1)
+        Xm = (rng.standard_normal((p, 12, 2, 2)) * 0.3 + np.eye(2)).astype(np.float32)
+        def mm_np(a, b):
+            return np.einsum('mij,mjk->mik', a, b)
+        sim = simulate_allreduce([Xm[i] for i in range(p)], 3, op=mm_np)
+        def mm_flat(a, b):
+            A = a.reshape(-1, 2, 2); B = b.reshape(-1, 2, 2)
+            return jnp.einsum('mij,mjk->mik', A, B).reshape(-1)
+        body = lambda x: dptree_allreduce(x[0].reshape(-1), "data", p,
+                                          num_blocks=3, op=mm_flat,
+                                          op_rev=mm_flat).reshape(12, 2, 2)[None]
+        sm = jax.shard_map(body, mesh=mesh, in_specs=P("data", None, None, None),
+                           out_specs=P("data", None, None, None))
+        out = np.asarray(jax.jit(sm)(jnp.asarray(Xm)))
+        for r in range(p):
+            np.testing.assert_allclose(out[r], sim.outputs[r], rtol=2e-4,
+                                       atol=2e-4)
+        print("ok")
+    """)
+
+
+def test_bucketed_and_structured_api():
+    run_sub("""
+        from repro.core.collectives import (CollectiveConfig,
+                                            bucketed_all_reduce,
+                                            structured_all_reduce)
+        rng = np.random.default_rng(1)
+        tree = {"a": rng.standard_normal((3, 7)).astype(np.float32),
+                "b": rng.standard_normal((11,)).astype(np.float32)}
+        trees = [jax.tree.map(lambda x: x + k, tree) for k in range(p)]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+        want = jax.tree.map(lambda *xs: np.sum(xs, axis=0), *trees)
+        for method in ["dptree", "redbcast", "ring", "psum", "auto"]:
+            cfg = CollectiveConfig(method=method)
+            body = lambda t: jax.tree.map(lambda l: l[None],
+                bucketed_all_reduce(jax.tree.map(lambda l: l[0], t),
+                                    "data", p, cfg))
+            sm = jax.shard_map(body, mesh=mesh, in_specs=P("data"),
+                               out_specs=P("data"))
+            out = jax.jit(sm)(stacked)
+            for k in tree:
+                got = np.asarray(out[k])
+                for r in range(p):
+                    np.testing.assert_allclose(got[r], want[k], rtol=3e-5,
+                                               atol=3e-5, err_msg=method)
+        # structured flash-decoding combine
+        def comb(a, b):
+            m = jnp.maximum(a["m"], b["m"])
+            ea, eb = jnp.exp(a["m"] - m), jnp.exp(b["m"] - m)
+            return {"m": m, "s": a["s"] * ea + b["s"] * eb}
+        parts = [{"m": rng.standard_normal((4,)).astype(np.float32),
+                  "s": rng.random((4,)).astype(np.float32) + .5}
+                 for _ in range(p)]
+        want2 = parts[0]
+        for q in parts[1:]:
+            want2 = comb(jax.tree.map(jnp.asarray, want2),
+                         jax.tree.map(jnp.asarray, q))
+        stacked2 = jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
+        body = lambda t: jax.tree.map(lambda l: l[None],
+            structured_all_reduce(jax.tree.map(lambda l: l[0], t),
+                                  "data", p, comb))
+        sm = jax.shard_map(body, mesh=mesh, in_specs=P("data"),
+                           out_specs=P("data"))
+        out = jax.jit(sm)(stacked2)
+        for k in want2:
+            got = np.asarray(out[k])
+            for r in range(p):
+                np.testing.assert_allclose(got[r], np.asarray(want2[k]),
+                                           rtol=1e-4, atol=1e-4)
+        print("ok")
+    """)
+
+
+def test_odd_device_counts():
+    """Non-power-of-two p exercises the unbalanced tree paths."""
+    for d in (3, 5, 7):
+        run_sub("""
+            from repro.core.dptree import dptree_allreduce
+            rng = np.random.default_rng(2)
+            X = rng.standard_normal((p, 29)).astype(np.float32)
+            body = lambda x: dptree_allreduce(x[0], "data", p, num_blocks=4)[None]
+            sm = jax.shard_map(body, mesh=mesh, in_specs=P("data", None),
+                               out_specs=P("data", None))
+            out = np.asarray(jax.jit(sm)(jnp.asarray(X)))
+            for r in range(p):
+                np.testing.assert_allclose(out[r], X.sum(0), rtol=2e-5,
+                                           atol=2e-5)
+            print("ok")
+        """, devices=d)

@@ -1,0 +1,60 @@
+"""The alpha-beta cost model: formulas, Pipelining Lemma, auto switch."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import cost_model as cm
+
+
+def test_dptree_beats_redbcast_bandwidth():
+    """Paper's headline: 3*beta*m vs 4*beta*m for large m."""
+    p, m = 256, 1 << 30
+    model = cm.CommModel(alpha=1e-6, beta=1e-9)
+    b_dp = cm.optimal_blocks(p, m, model, "dptree")
+    b_rb = cm.optimal_blocks(p, m, model, "redbcast")
+    t_dp = cm.dptree_time(p, m, b_dp, model)
+    t_rb = cm.redbcast_time(p, m, b_rb, model)
+    assert t_dp < t_rb
+    # asymptotic ratio approaches 3/4
+    assert 0.70 < t_dp / t_rb < 0.85
+
+
+def test_tree_beats_ring_small_ring_beats_tree_large():
+    p = 256
+    model = cm.TPU_V5E
+    small, large = 64 * 1024, 1 << 30
+    assert cm.dptree_time(p, small, cm.optimal_blocks(p, small, model), model) \
+        < cm.ring_time(p, small, model)
+    assert cm.ring_time(p, large, model) \
+        < cm.dptree_time(p, large, cm.optimal_blocks(p, large, model), model)
+    assert cm.best_algorithm(p, small, model) in ("dptree", "sptree")
+    assert cm.best_algorithm(p, large, model) == "ring"
+
+
+@settings(max_examples=30, deadline=None)
+@given(p=st.integers(min_value=2, max_value=512),
+       logm=st.integers(min_value=8, max_value=30))
+def test_optimal_blocks_is_locally_optimal(p, logm):
+    m = float(1 << logm)
+    model = cm.TPU_V5E
+    b = cm.optimal_blocks(p, m, model, "dptree")
+    t = cm.dptree_time(p, m, b, model)
+    for b2 in {max(1, b // 2), b * 2}:
+        if b2 != b:
+            # the analytic optimum is within 5% of neighboring block counts
+            assert t <= cm.dptree_time(p, m, b2, model) * 1.05
+
+
+def test_sptree_latency_worse_than_dptree():
+    p, m = 254, 1 << 20
+    model = cm.TPU_V5E
+    b = 16
+    assert cm.dptree_time(p, m, b, model) <= cm.sptree_time(p, m, b, model)
+
+
+def test_predicted_table_shape():
+    rows = cm.predicted_table(288, [4, 1000, 10_000_000], cm.PAPER_HYDRA)
+    assert rows.shape == (3, 5)
+    assert (rows[:, 1:] > 0).all()

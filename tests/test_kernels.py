@@ -1,0 +1,94 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ref
+from repro.kernels.ops import (block_combine2, block_combine3, kv_dequantize,
+                               kv_quantize)
+
+DTYPES = [np.float32, jnp.bfloat16]
+OPS = ["add", "max", "min", "mul"]
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(min_value=1, max_value=70000),
+       dt=st.sampled_from(range(len(DTYPES))),
+       op=st.sampled_from(OPS))
+def test_combine2_matches_ref(m, dt, op):
+    rng = np.random.default_rng(m)
+    a = jnp.asarray(rng.standard_normal(m), DTYPES[dt])
+    b = jnp.asarray(rng.standard_normal(m), DTYPES[dt])
+    got = block_combine2(a, b, op=op)
+    want = ref.combine2_ref(a, b, op=op)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(min_value=1, max_value=70000),
+       dt=st.sampled_from(range(len(DTYPES))),
+       op=st.sampled_from(OPS))
+def test_combine3_fused_matches_ref(m, dt, op):
+    rng = np.random.default_rng(m + 7)
+    a, b, c = (jnp.asarray(rng.standard_normal(m), DTYPES[dt])
+               for _ in range(3))
+    got = block_combine3(a, b, c, op=op)
+    want = ref.combine3_ref(a, b, c, op=op)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(min_value=1, max_value=600),
+       scale=st.floats(min_value=0.01, max_value=100.0))
+def test_quantize_roundtrip(rows, scale):
+    rng = np.random.default_rng(rows)
+    x = jnp.asarray(rng.standard_normal((rows, 128)) * scale, jnp.float32)
+    q, s = kv_quantize(x)
+    qr, sr = ref.quantize_int8_ref(np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    xd = kv_dequantize(q, s, dtype=jnp.float32)
+    err = np.abs(np.asarray(xd) - np.asarray(x)).max()
+    assert err <= (np.abs(np.asarray(x)).max() / 127.0) * 1.01 + 1e-6
+
+
+def test_quantize_kv_shape():
+    x = jnp.zeros((3, 5, 128), jnp.bfloat16)
+    q, s = kv_quantize(x)
+    assert q.shape == (3, 5, 128) and q.dtype == jnp.int8
+    assert s.shape == (3, 5, 1)
+    back = kv_dequantize(q, s)
+    assert back.shape == x.shape and back.dtype == jnp.bfloat16
+
+
+@settings(max_examples=6, deadline=None)
+@given(t_blocks=st.integers(min_value=1, max_value=4),
+       mode=st.sampled_from(["causal", "window", "chunk", "full"]))
+def test_flash_attention_kernel_matches_sdpa(t_blocks, mode):
+    import jax
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models import layers as L
+
+    B, H, dh, bq = 2, 2, 16, 32
+    T = bq * t_blocks
+    ks = jax.random.split(jax.random.PRNGKey(t_blocks), 3)
+    q = jax.random.normal(ks[0], (B * H, T, dh))
+    k = jax.random.normal(ks[1], (B * H, T, dh))
+    v = jax.random.normal(ks[2], (B * H, T, dh))
+    causal = mode != "full"
+    window = 24 if mode == "window" else None
+    chunk = bq if mode == "chunk" else None
+    got = flash_attention(q, k, v, causal=causal, window=window, chunk=chunk,
+                          bq=bq, bk=bq, interpret=True)
+    qb = q.reshape(B, H, T, dh).transpose(0, 2, 1, 3)
+    kb = k.reshape(B, H, T, dh).transpose(0, 2, 1, 3)
+    vb = v.reshape(B, H, T, dh).transpose(0, 2, 1, 3)
+    mask = L._attn_mask(T, T, causal, window, chunk)
+    want = L._sdpa(qb, kb, vb, mask, H, H).reshape(
+        B, T, H, dh).transpose(0, 2, 1, 3).reshape(B * H, T, dh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)

@@ -1,0 +1,68 @@
+"""The numpy simulator is the schedule oracle: correctness + step counts."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.simulator import count_active_steps, simulate_allreduce
+from repro.core.topology import build_dual_tree
+
+
+@settings(max_examples=25, deadline=None)
+@given(p=st.integers(min_value=1, max_value=40),
+       b=st.integers(min_value=1, max_value=12),
+       m=st.integers(min_value=1, max_value=50))
+def test_sum_allreduce_any_p_b_m(p, b, m):
+    rng = np.random.default_rng(p * 1000 + b * 10 + m)
+    xs = [rng.standard_normal(m) for _ in range(p)]
+    res = simulate_allreduce(xs, min(b, m))
+    want = np.sum(xs, axis=0)
+    for o in res.outputs:
+        np.testing.assert_allclose(o, want, rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(p=st.integers(min_value=2, max_value=24),
+       b=st.integers(min_value=1, max_value=6))
+def test_non_commutative_rank_order(p, b):
+    """2x2 matrix product per slot: requires the paper's exact rank order."""
+    rng = np.random.default_rng(p * 100 + b)
+    m = 6
+
+    def op(a, c):
+        return np.einsum("mij,mjk->mik", a, c)
+
+    xs = [rng.standard_normal((m, 2, 2)) * 0.3 + np.eye(2) for _ in range(p)]
+    res = simulate_allreduce(xs, b, op=op)
+    want = xs[0]
+    for x in xs[1:]:
+        want = op(want, x)
+    for o in res.outputs:
+        np.testing.assert_allclose(o, want, rtol=1e-7, atol=1e-7)
+
+
+def test_active_steps_match_paper_formula_balanced():
+    """For p = 2^h - 2 the measured active steps equal 4h'-3+3(b-1)."""
+    for h in (2, 3, 4, 5, 6):
+        p = 2 ** h - 2
+        sim, paper = count_active_steps(p, 16)
+        assert sim == paper, (p, sim, paper)
+
+
+def test_active_steps_never_exceed_formula():
+    for p in (3, 5, 9, 16, 17, 33, 64, 100):
+        sim, paper = count_active_steps(p, 8)
+        assert sim <= paper, (p, sim, paper)
+
+
+def test_blocks_sent_accounting():
+    p, b = 14, 4
+    topo = build_dual_tree(p)
+    xs = [np.ones(8) for _ in range(p)]
+    res = simulate_allreduce(xs, b, topo=topo)
+    # up traffic: every non-root sends b partial blocks; each root sends b to
+    # its dual. down: every non-root receives b result blocks.
+    n_nonroot = p - 2
+    expected = n_nonroot * b + 2 * b + n_nonroot * b
+    assert res.blocks_sent == expected

@@ -1,0 +1,88 @@
+"""End-to-end behaviour tests of the public API surface."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.configs.base import ARCHS, SHAPES, get_config, get_parallel, \
+    input_specs, supports_shape
+
+
+def test_public_api_imports():
+    from repro.core import (CollectiveConfig, all_reduce, build_dual_tree,
+                            bucketed_all_reduce, dptree_allreduce,
+                            optimal_blocks, simulate_allreduce)
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.transformer import ModelConfig, init_params, loss_fn
+    assert callable(dptree_allreduce)
+
+
+def test_every_arch_has_config_reduced_and_parallel():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        red = get_config(arch, reduced=True)
+        pc = get_parallel(arch)
+        assert cfg.n_layers >= red.n_layers
+        assert pc.dp_mode in ("manual", "fsdp")
+
+
+def test_input_specs_cover_all_cells():
+    n = 0
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for name, suite in SHAPES.items():
+            if not supports_shape(arch, name):
+                continue
+            specs = input_specs(cfg, suite)
+            assert all(hasattr(v, "shape") for v in specs.values())
+            lead = next(iter(specs.values())).shape[0]
+            assert lead == suite.global_batch
+            n += 1
+    assert n == 34  # 40 cells minus 6 documented long_500k skips
+
+
+def test_assigned_config_figures_exact():
+    """The published architecture figures are encoded exactly."""
+    c = get_config("minicpm_2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 2304, 36, 36, 5760, 122753)
+    c = get_config("nemotron_4_15b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (32, 6144, 48, 8, 24576, 256000)
+    assert c.activation == "relu2" and not c.gated_mlp
+    c = get_config("mixtral_8x22b")
+    assert (c.n_layers, c.d_model, c.moe.n_experts, c.moe.top_k) \
+        == (56, 6144, 8, 2)
+    assert c.pattern[0][0].sliding_window == 4096
+    c = get_config("llama4_scout_17b_a16e")
+    assert (c.moe.n_experts, c.moe.top_k) == (16, 1)
+    assert len(c.pattern) == 4 and not c.pattern[3][0].use_rope
+    c = get_config("jamba_v0_1_52b")
+    kinds = [l[0].kind for l in c.pattern]
+    assert kinds.count("attn") == 1 and kinds.count("mamba") == 7
+    ffns = [l[1].kind for l in c.pattern]
+    assert ffns.count("moe") == 4
+    c = get_config("qwen2_vl_7b")
+    assert c.mrope_sections == (16, 24, 24)
+    c = get_config("seamless_m4t_large_v2")
+    assert c.n_enc_layers == 24 and c.vocab_size == 256206
+
+
+def test_long_500k_rule_matches_design_doc():
+    runs = {a for a in ARCHS if supports_shape(a, "long_500k")}
+    assert runs == {"rwkv6_7b", "jamba_v0_1_52b", "mixtral_8x22b",
+                    "llama4_scout_17b_a16e"}
+
+
+def test_quickstart_path():
+    """The quickstart example's core path: tiny model, few steps, loss drops."""
+    import repro.launch.train as T
+    args = T.argparse.Namespace(
+        arch="minicpm_2b", reduced=True, steps=6, seq_len=32, global_batch=4,
+        mesh="1x1", lr=2e-3, accum=1, seed=0, ckpt_dir=None, ckpt_every=100,
+        log_every=1, collective=None, max_restarts=0)
+    res = T.train_loop(args)
+    losses = [l for _, l in res["history"]]
+    assert losses[-1] < losses[0]

@@ -1,0 +1,70 @@
+"""Property tests for the dual/single post-order tree topologies."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.topology import (NO_NODE, build_dual_tree, build_single_tree,
+                                 validate_topology)
+
+
+@settings(max_examples=60, deadline=None)
+@given(p=st.integers(min_value=1, max_value=300))
+def test_dual_tree_invariants(p):
+    validate_topology(build_dual_tree(p))
+
+
+@settings(max_examples=60, deadline=None)
+@given(p=st.integers(min_value=1, max_value=300))
+def test_single_tree_invariants(p):
+    validate_topology(build_single_tree(p))
+
+
+@settings(max_examples=40, deadline=None)
+@given(p=st.integers(min_value=2, max_value=200))
+def test_every_edge_in_exactly_one_class(p):
+    topo = build_dual_tree(p)
+    up_edges = [e for cls in topo.up_pairs for e in cls]
+    # each non-root contributes one up edge; dual roots contribute two
+    n_expected = (p - len(topo.roots)) + (2 if len(topo.roots) == 2 else 0)
+    assert len(up_edges) == n_expected
+    assert len(set(up_edges)) == len(up_edges)
+
+
+@settings(max_examples=40, deadline=None)
+@given(p=st.integers(min_value=2, max_value=200))
+def test_depth_is_logarithmic(p):
+    topo = build_dual_tree(p)
+    half = (p + 1) // 2
+    assert topo.max_depth <= int(np.ceil(np.log2(half + 1)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(p=st.integers(min_value=2, max_value=128),
+       b=st.integers(min_value=1, max_value=40))
+def test_step_count_matches_paper_band(p, b):
+    """num_steps is within the paper's 4h-3+3(b-1) budget (+3 sync slack)."""
+    topo = build_dual_tree(p)
+    h = topo.max_depth + 1
+    paper = (4 * h - 3) + 3 * (b - 1)
+    assert topo.num_steps(b) <= paper + 3
+
+
+def test_balanced_case_exact():
+    # p = 2^h - 2 gives two perfect trees; roots are p/2-1 and p-1
+    for h in (2, 3, 4, 5):
+        p = 2 ** h - 2
+        topo = build_dual_tree(p)
+        assert topo.roots == (p // 2 - 1, p - 1)
+        assert topo.max_depth == h - 2
+
+
+def test_p1_p2_degenerate():
+    t1 = build_dual_tree(1)
+    assert t1.roots == (0,)
+    t2 = build_dual_tree(2)
+    assert t2.roots == (0, 1)
+    assert t2.active_classes() == tuple(
+        e for e in range(3) if t2.up_pairs[e])
+    assert sum(len(c) for c in t2.up_pairs) == 2  # the dual exchange only
