@@ -1,0 +1,17 @@
+# Developer entry points. `make verify` is the tier-1 gate.
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: verify test bench bench-collectives
+
+verify:
+	$(PY) -m pytest -x -q
+
+test: verify
+
+bench:
+	$(PY) -m benchmarks.run
+
+bench-collectives:
+	$(PY) -m benchmarks.run --only collectives

@@ -30,15 +30,15 @@ def measured(devices: int = 8, reps: int = 5):
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.core.dptree import dptree_allreduce
-        mesh = jax.make_mesh(({devices},), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import shard_map, make_mesh
+        mesh = make_mesh(({devices},), ("data",))
         p = {devices}
         X = jnp.asarray(np.random.default_rng(0).standard_normal((p, {M_ELEMS})),
                         jnp.float32)
         out = []
         for b in {BLOCKS}:
             body = lambda x: dptree_allreduce(x[0], "data", p, num_blocks=b)[None]
-            f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("data", None),
+            f = jax.jit(shard_map(body, mesh=mesh, in_specs=P("data", None),
                                       out_specs=P("data", None)))
             f(X)[0].block_until_ready()
             ts = []

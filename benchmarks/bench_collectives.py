@@ -22,9 +22,10 @@ import textwrap
 import numpy as np
 
 from repro.core import cost_model as cm
+from repro.core.topology import resolve_group_size
 
 SIZES = [1_000, 10_000, 100_000, 1_000_000, 4_000_000]  # f32 elements
-METHODS = ["dptree", "sptree", "redbcast", "ring", "psum"]
+METHODS = ["dptree", "sptree", "redbcast", "ring", "hier", "psum"]
 
 
 def measured_rows(devices: int = 8, reps: int = 5):
@@ -36,20 +37,22 @@ def measured_rows(devices: int = 8, reps: int = 5):
         sys.path.insert(0, {root + '/src'!r})
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map, make_mesh
         from repro.core.collectives import CollectiveConfig, all_reduce
-        mesh = jax.make_mesh(({devices},), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh(({devices},), ("data",))
         p = {devices}
         out = []
         for m in {SIZES}:
             X = jnp.asarray(np.random.default_rng(0).standard_normal((p, m)),
                             jnp.float32)
             for method in {METHODS}:
-                cfg = CollectiveConfig(method=method)
+                cfg = CollectiveConfig(
+                    method=method,
+                    group_size=4 if method == "hier" else None)
                 body = lambda x: all_reduce(x[0], "data", p, cfg)[None]
-                f = jax.jit(jax.shard_map(body, mesh=mesh,
-                                          in_specs=P("data", None),
-                                          out_specs=P("data", None)))
+                f = jax.jit(shard_map(body, mesh=mesh,
+                                      in_specs=P("data", None),
+                                      out_specs=P("data", None)))
                 f(X)[0].block_until_ready()  # compile+warm
                 ts = []
                 for _ in range({reps}):
@@ -67,7 +70,7 @@ def measured_rows(devices: int = 8, reps: int = 5):
     return json.loads(line[len("RESULT "):])
 
 
-def predicted_rows(p: int, model: cm.CommModel):
+def predicted_rows(p: int, model: cm.CommModel, group_size: int = 4):
     rows = []
     for m in SIZES:
         nbytes = m * 4
@@ -78,6 +81,12 @@ def predicted_rows(p: int, model: cm.CommModel):
         rows.append((m, "redbcast", cm.redbcast_time(
             p, nbytes, cm.optimal_blocks(p, nbytes, model, "redbcast"), model) * 1e6))
         rows.append((m, "ring", cm.ring_time(p, nbytes, model) * 1e6))
+        gs = resolve_group_size(p, group_size) if group_size else None
+        if gs is not None:
+            rows.append((m, "hier", cm.hier_time(
+                p, nbytes,
+                cm.optimal_blocks(p, nbytes, model, "hier", group_size=gs),
+                model, group_size=gs) * 1e6))
     return rows
 
 
@@ -91,6 +100,9 @@ def run(csv_out):
     for m, method, us in predicted_rows(256, cm.TPU_V5E):
         csv_out(f"collective_predicted_v5e256/{method}/m={m}", us,
                 "alpha-beta model, one pod")
+    for m, method, us in predicted_rows(256, cm.TPU_V5E_INTERPOD):
+        csv_out(f"collective_predicted_v5e256_interpod/{method}/m={m}", us,
+                "alpha-beta model, slow inter-group links (hier's regime)")
     # headline ratio check (paper: dptree/redbcast -> 3/4 for large m)
     nbytes = SIZES[-1] * 4
     t_dp = cm.dptree_time(288, nbytes, cm.optimal_blocks(288, nbytes,

@@ -7,17 +7,20 @@ Prints ``name,value,derived`` CSV lines. Usage:
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
-from benchmarks import (bench_blocksize, bench_collectives, bench_kernels,
-                        bench_latency_model)
+from benchmarks import (bench_autotune, bench_blocksize, bench_collectives,
+                        bench_kernels, bench_latency_model)
 
 SUITES = {
-    # paper Fig 1 / Table 2: four reduction-to-all implementations x sizes
+    # paper Fig 1 / Table 2: the reduction-to-all implementations x sizes
     "collectives": bench_collectives.run,
     # paper's open question #1: pipeline block size
     "blocksize": bench_blocksize.run,
+    # measured closed loop over (algorithm, num_blocks) -> autotune cache
+    "autotune": bench_autotune.run,
     # paper §1.2 latency formula
     "latency": bench_latency_model.run,
     # kernel layer
@@ -29,22 +32,36 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(SUITES))
+    ap.add_argument("--artifact", default="BENCH_1.json",
+                    help="JSON artifact path recording every row "
+                         "('' disables)")
     args = ap.parse_args(argv)
     chosen = (args.only.split(",") if args.only else list(SUITES))
 
     failures = []
+    rows = []
+    current_suite = [""]
 
     def csv_out(name, value, derived=""):
         print(f"{name},{value},{derived}")
+        rows.append({"suite": current_suite[0], "name": name,
+                     "value": value, "derived": derived})
 
     for name in chosen:
         print(f"# ---- {name} ----")
+        current_suite[0] = name
         try:
             SUITES[name](csv_out)
         except Exception as e:
             failures.append(name)
             traceback.print_exc()
             print(f"{name},ERROR,{e}")
+    if args.artifact:
+        doc = {"schema": 1, "suites_run": chosen, "failures": failures,
+               "rows": rows}
+        with open(args.artifact, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"# artifact: {args.artifact} ({len(rows)} rows)")
     return 1 if failures else 0
 
 

@@ -29,8 +29,8 @@ from repro.core.cost_model import TPU_V5E, optimal_blocks  # noqa: E402
 
 def main():
     p = 8
-    mesh = jax.make_mesh((p,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh, shard_map
+    mesh = make_mesh((p,), ("data",))
     rng = np.random.default_rng(0)
     for m in (10_000, 1_000_000):
         X = jnp.asarray(rng.standard_normal((p, m)), jnp.float32)
@@ -38,10 +38,11 @@ def main():
         print(f"\nm = {m} f32 elements "
               f"(analytic optimal blocks for one v5e pod: "
               f"{optimal_blocks(256, m * 4, TPU_V5E, 'dptree')})")
-        for method in ("dptree", "sptree", "redbcast", "ring", "psum"):
-            cfg = CollectiveConfig(method=method)
+        for method in ("dptree", "sptree", "redbcast", "ring", "hier", "psum"):
+            cfg = CollectiveConfig(method=method,
+                                   group_size=4 if method == "hier" else None)
             body = lambda x: all_reduce(x[0], "data", p, cfg)[None]
-            f = jax.jit(jax.shard_map(body, mesh=mesh,
+            f = jax.jit(shard_map(body, mesh=mesh,
                                       in_specs=P("data", None),
                                       out_specs=P("data", None)))
             out = f(X)

@@ -29,8 +29,8 @@ from repro.models import layers as L  # noqa: E402
 
 def main():
     p = 8
-    mesh = jax.make_mesh((p,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh, shard_map
+    mesh = make_mesh((p,), ("data",))
     cfg = L.AttnConfig(d_model=64, n_heads=4, n_kv_heads=2, head_dim=16)
     params = L.attn_init(jax.random.PRNGKey(0), cfg)
     B, S_total = 2, 512  # cache length 512 split across 8 devices
@@ -54,7 +54,7 @@ def main():
                                          L.softmax_partials_combine)
         return L.finish_partials(params, cfg, combined, x.dtype)
 
-    f = jax.jit(jax.shard_map(body, mesh=mesh,
+    f = jax.jit(shard_map(body, mesh=mesh,
                               in_specs=(P(None, "data"), P(None, "data")),
                               out_specs=P(), check_vma=False))
     got = f(cache_k, cache_v)

@@ -1,0 +1,142 @@
+"""jax version compatibility shims.
+
+The framework is written against the current jax API surface; this module
+keeps it importable and runnable on older jaxlib builds (the container ships
+0.4.x) where ``jax.shard_map``, ``jax.sharding.AxisType`` and
+``jax.sharding.get_abstract_mesh`` do not exist yet. Everything here is a
+thin re-export or a graceful degradation — no behavioral forks beyond what
+the missing API implies.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "make_mesh", "get_abstract_mesh", "auto_axes",
+           "HAS_AXIS_TYPE"]
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+import threading
+
+# Old jax has no axis types, so code inside a partial-manual shard_map cannot
+# ask which mesh axes are manual (a sharding constraint naming one is an
+# error). The compat shard_map records its manual set here while the wrapped
+# body is being traced; auto_axes() subtracts it. The same scope carries
+# axis-index overrides (see axis_index below).
+_TRACING_MANUAL = threading.local()
+
+
+def _manual_stack() -> list:
+    if not hasattr(_TRACING_MANUAL, "stack"):
+        _TRACING_MANUAL.stack = []
+    return _TRACING_MANUAL.stack
+
+
+def axis_index(axis_name: str):
+    """``jax.lax.axis_index`` that also works in old-jax partial-manual regions.
+
+    On jax < 0.6, ``axis_index`` inside a partial-manual shard_map lowers to a
+    ``PartitionId`` instruction the SPMD partitioner rejects. The compat
+    shard_map smuggles each manual axis's rank in as sharded data and exposes
+    it here, so schedule code can stay oblivious.
+    """
+    for frame in reversed(_manual_stack()):
+        override = frame[1].get(axis_name)
+        if override is not None:
+            return override
+    return jax.lax.axis_index(axis_name)
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax < 0.6: public API lived under experimental, with older kwargs
+    import jax.numpy as _jnp
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+    from jax.sharding import PartitionSpec as _P
+
+    def shard_map(f, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None, check_rep=None, **_ignored):
+        # New API: axis_names = the MANUAL axes. Old API: auto = the rest.
+        manual = (frozenset(axis_names) if axis_names is not None
+                  else frozenset(mesh.axis_names))
+        auto = frozenset(mesh.axis_names) - manual
+        cr = check_vma if check_vma is not None else (
+            check_rep if check_rep is not None else True)
+        idx_axes = tuple(sorted(manual)) if auto else ()
+
+        def wrapped(idx, *args, **kwargs):
+            overrides = {ax: idx[k][0] for k, ax in enumerate(idx_axes)}
+            _manual_stack().append((manual, overrides, auto))
+            try:
+                return f(*args, **kwargs)
+            finally:
+                _manual_stack().pop()
+
+        def outer(*args, **kwargs):
+            # Single-spec shorthand broadcasts over the positional args; the
+            # arg count is only known here, so build the inner map per call.
+            if isinstance(in_specs, _P) or not isinstance(in_specs,
+                                                          (tuple, list)):
+                ins = (in_specs,) * len(args)  # shorthand: one spec, all args
+            else:
+                ins = tuple(in_specs)
+            idx = tuple(_jnp.arange(mesh.shape[ax], dtype=_jnp.int32)
+                        for ax in idx_axes)
+            inner = _shard_map_exp(
+                wrapped, mesh=mesh,
+                in_specs=(tuple(_P(ax) for ax in idx_axes),) + ins,
+                out_specs=out_specs, check_rep=cr, auto=auto)
+            return inner(idx, *args, **kwargs)
+
+        return outer
+
+
+def make_mesh(shape, axes, devices=None):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if HAS_AXIS_TYPE:
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(tuple(shape), tuple(axes), **kw)
+
+
+def in_manual_trace() -> bool:
+    """True while tracing inside a compat shard_map body (old jax only)."""
+    return bool(_manual_stack())
+
+
+def partial_manual_trace() -> bool:
+    """True inside an old-jax compat shard_map that also has GSPMD-auto axes.
+
+    In that regime old XLA hard-aborts on ``ppermute`` (manual-subgroup
+    sharding checks), so schedule-based collectives must fall back to psum.
+    """
+    stack = _manual_stack()
+    return bool(stack) and bool(stack[-1][2])
+
+
+def get_abstract_mesh():
+    """Current abstract mesh, or None when the API (or a mesh) is absent."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        return None
+    return fn()
+
+
+def auto_axes(env) -> set:
+    """Names of the mesh axes GSPMD may shard over (Auto type).
+
+    On jax builds without axis types every axis is implicitly Auto, minus any
+    axes currently manual under a compat shard_map trace.
+    """
+    if not HAS_AXIS_TYPE:
+        stack = _manual_stack()
+        manual = stack[-1][0] if stack else frozenset()
+        return set(env.axis_names) - set(manual)
+    try:
+        types = dict(zip(env.axis_names, env.axis_types))
+    except Exception:
+        types = {a: jax.sharding.AxisType.Auto for a in env.axis_names}
+    return {a for a, t in types.items() if t == jax.sharding.AxisType.Auto}

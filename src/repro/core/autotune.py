@@ -1,0 +1,245 @@
+"""Empirical (algorithm, num_blocks) autotuner for the collective stack.
+
+The paper's open question #1 is how to pick the pipeline block count; its
+experimental lesson (Table 2: OpenMPI collapsing mid-range on a bad internal
+switch) is *never let the library guess*. The analytic alpha-beta model in
+:mod:`repro.core.cost_model` is the first line of defense; this module closes
+the loop empirically:
+
+* :func:`candidate_settings` enumerates ``(algorithm, num_blocks)`` candidates
+  around the analytic optimum (the analytic pick, its half/double block
+  neighbors, plus every other modeled algorithm at its own optimum).
+* :func:`tune` times the candidates through a caller-supplied ``runner`` —
+  measurement has to happen inside a real mesh, which only the caller owns —
+  and records the winner in a JSON cache on disk.
+* :func:`lookup` is consulted by ``CollectiveConfig(method="auto")`` at trace
+  time: a cache hit overrides the analytic choice with the measured one.
+
+Cache entries are keyed by ``(p, nbytes, dtype, topology)`` where ``topology``
+is the :class:`~repro.core.cost_model.CommModel` name (or any caller-chosen
+topology tag, e.g. ``"cpu8"`` for the virtual-device bench), so results from
+different fabrics never cross-contaminate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import threading
+from typing import Callable, Sequence
+
+from repro.core import cost_model as cm
+
+__all__ = [
+    "TuneResult",
+    "AutotuneCache",
+    "candidate_settings",
+    "tune",
+    "lookup",
+    "default_cache_path",
+    "get_cache",
+    "reset_cache",
+]
+
+_ALGORITHMS = ("dptree", "sptree", "redbcast", "ring")
+
+# Block-count multipliers probed around the analytic optimum.
+_BLOCK_SWEEP = (0.5, 1.0, 2.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    algorithm: str
+    num_blocks: int
+    time_s: float
+    # group shape a 'hier' winner was measured with; replayed on cache hits
+    # so the consumer never executes a configuration that was never timed.
+    group_size: int | None = None
+
+
+def _key(p: int, nbytes: int, dtype: str, topology: str) -> str:
+    return f"p={int(p)}/nbytes={int(nbytes)}/dtype={dtype}/topo={topology}"
+
+
+def default_cache_path() -> str:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    base = os.environ.get("XDG_CACHE_HOME",
+                          os.path.join(os.path.expanduser("~"), ".cache"))
+    return os.path.join(base, "repro", "autotune.json")
+
+
+class AutotuneCache:
+    """Disk-backed ``key -> {algorithm, num_blocks, time_us}`` store.
+
+    Writes are atomic (tmp file + rename) so concurrent benchmark processes
+    cannot corrupt the cache; reads tolerate a missing or malformed file by
+    starting empty.
+    """
+
+    SCHEMA = 1
+
+    def __init__(self, path: str | None = None):
+        self.path = path or default_cache_path()
+        self._lock = threading.Lock()
+        self._entries: dict = {}
+        self._loaded = False
+
+    # -------------------------------------------------- persistence
+    def load(self) -> "AutotuneCache":
+        with self._lock:
+            self._entries = {}
+            try:
+                with open(self.path) as f:
+                    doc = json.load(f)
+                if isinstance(doc, dict) and doc.get("schema") == self.SCHEMA:
+                    self._entries = dict(doc.get("entries", {}))
+            except (OSError, ValueError):
+                pass
+            self._loaded = True
+        return self
+
+    def save(self) -> None:
+        with self._lock:
+            doc = {"schema": self.SCHEMA, "entries": self._entries}
+            d = os.path.dirname(os.path.abspath(self.path))
+            os.makedirs(d, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=d, suffix=".autotune.tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(doc, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+
+    # -------------------------------------------------- access
+    def _ensure(self):
+        if not self._loaded:
+            self.load()
+
+    def get(self, p: int, nbytes: int, dtype: str,
+            topology: str) -> TuneResult | None:
+        self._ensure()
+        e = self._entries.get(_key(p, nbytes, dtype, topology))
+        if not e:
+            return None
+        try:
+            gs = e.get("group_size")
+            return TuneResult(str(e["algorithm"]), int(e["num_blocks"]),
+                              float(e.get("time_s", 0.0)),
+                              int(gs) if gs is not None else None)
+        except (KeyError, TypeError, ValueError):
+            return None
+
+    def put(self, p: int, nbytes: int, dtype: str, topology: str,
+            result: TuneResult) -> None:
+        self._ensure()
+        with self._lock:
+            self._entries[_key(p, nbytes, dtype, topology)] = {
+                "algorithm": result.algorithm,
+                "num_blocks": int(result.num_blocks),
+                "time_s": float(result.time_s),
+                "group_size": result.group_size,
+            }
+
+    def __len__(self) -> int:
+        self._ensure()
+        return len(self._entries)
+
+
+# Process-wide cache instance; tests swap it via reset_cache(path).
+_CACHE: AutotuneCache | None = None
+_CACHE_PATH: str | None = None
+
+
+def get_cache() -> AutotuneCache:
+    global _CACHE, _CACHE_PATH
+    path = default_cache_path()
+    if _CACHE is None or path != _CACHE_PATH:
+        _CACHE, _CACHE_PATH = AutotuneCache(path), path
+    return _CACHE
+
+
+def reset_cache() -> None:
+    """Drop the process-wide cache (e.g. after changing the env var path)."""
+    global _CACHE, _CACHE_PATH
+    _CACHE, _CACHE_PATH = None, None
+
+
+def candidate_settings(p: int, nbytes: int, model: cm.CommModel,
+                       algorithms: Sequence[str] = _ALGORITHMS,
+                       group_size: int | None = None) -> list:
+    """``(algorithm, num_blocks)`` candidates around the analytic optimum."""
+    out = []
+    seen = set()
+
+    def add(algo, b):
+        b = max(1, int(b))
+        if (algo, b) not in seen:
+            seen.add((algo, b))
+            out.append((algo, b))
+
+    for algo in algorithms:
+        if algo == "ring":
+            add("ring", 1)
+            continue
+        b0 = cm.optimal_blocks(p, float(max(nbytes, 1)), model, algo,
+                               group_size=group_size)
+        for mult in _BLOCK_SWEEP:
+            add(algo, round(b0 * mult))
+    return out
+
+
+def tune(runner: Callable[[str, int], float], p: int, nbytes: int,
+         dtype: str, topology: str, model: cm.CommModel,
+         algorithms: Sequence[str] = _ALGORITHMS,
+         group_size: int | None = None,
+         cache: AutotuneCache | None = None,
+         save: bool = True) -> TuneResult:
+    """Measure candidates with ``runner(algorithm, num_blocks) -> seconds``.
+
+    The best measured setting is recorded in the cache (and persisted when
+    ``save``). ``runner`` failures (e.g. an algorithm unavailable on this
+    backend) are skipped, not fatal — unless every candidate fails.
+    """
+    cache = cache or get_cache()
+    # Resolve the group shape hier actually runs with BEFORE measuring, so
+    # the recorded TuneResult names the exact configuration that was timed.
+    from repro.core.topology import default_group_size
+    hier_gs = int(group_size) if group_size else default_group_size(p)
+    best: TuneResult | None = None
+    errors = []
+    for algo, b in candidate_settings(p, nbytes, model, algorithms,
+                                      group_size):
+        try:
+            t = float(runner(algo, b))
+        except Exception as e:  # candidate unavailable — keep tuning
+            errors.append((algo, b, e))
+            continue
+        if best is None or t < best.time_s:
+            best = TuneResult(algo, b, t,
+                              hier_gs if algo == "hier" else None)
+    if best is None:
+        raise RuntimeError(f"autotune: every candidate failed: {errors}")
+    cache.put(p, nbytes, dtype, topology, best)
+    if save:
+        cache.save()
+    return best
+
+
+def lookup(p: int, nbytes: int, dtype: str,
+           topology: str) -> TuneResult | None:
+    """Cache probe used by the ``auto`` method at trace time. Never raises."""
+    if os.environ.get("REPRO_AUTOTUNE", "1") in ("0", "off", "false"):
+        return None
+    try:
+        return get_cache().get(p, nbytes, dtype, topology)
+    except Exception:
+        return None

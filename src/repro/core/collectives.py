@@ -20,8 +20,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import autotune
 from repro.core import cost_model as cm
-from repro.core.dptree import (dptree_allreduce, redbcast_allreduce,
+from repro.core.dptree import (_COMMUTATIVE_OPS, dptree_allreduce,
+                               hier_allreduce, redbcast_allreduce,
                                ring_allreduce, sptree_allreduce)
 from repro.core.topology import build_dual_tree
 
@@ -33,20 +35,29 @@ __all__ = [
     "all_reduce_mean",
 ]
 
-METHODS = ("auto", "dptree", "sptree", "redbcast", "ring", "psum")
+METHODS = ("auto", "dptree", "sptree", "redbcast", "ring", "hier", "psum")
 
 
 @dataclasses.dataclass(frozen=True)
 class CollectiveConfig:
     """How gradient/activation reductions are executed.
 
-    ``method``       one of METHODS. ``auto`` = cost-model switch per size.
-    ``num_blocks``   pipeline block count; None = Pipelining-Lemma optimum.
+    ``method``       one of METHODS. ``auto`` = measured-autotuner hit if one
+                     exists for (p, bytes, dtype, fabric), else the cost-model
+                     switch per size.
+    ``num_blocks``   pipeline block count; None = Pipelining-Lemma optimum
+                     refined by local descent (and by the autotuner's measured
+                     pick under ``auto``).
     ``compression``  None | 'bf16' — cast payload before the wire, cast back.
     ``bucket_bytes`` split grad pytrees into buckets of at most this many
                      bytes; XLA's scheduler can overlap bucket k's collective
                      with bucket k+1's producers.
-    ``comm_model``   alpha-beta constants used by the auto switch/tuner.
+    ``comm_model``   alpha-beta constants for the INTER-group (slowest) fabric,
+                     used by the auto switch/tuner.
+    ``group_size``   ranks per fast-link group for the hierarchical method
+                     (None = 4, then 2, then flat). Also gates whether 'hier'
+                     competes in the ``auto`` switch.
+    ``intra_model``  alpha-beta constants for the intra-group fast links.
     """
 
     method: str = "dptree"
@@ -54,6 +65,8 @@ class CollectiveConfig:
     compression: str | None = None
     bucket_bytes: int = 1 << 30
     comm_model: cm.CommModel = cm.TPU_V5E
+    group_size: int | None = None
+    intra_model: cm.CommModel = cm.TPU_V5E
 
     def __post_init__(self):
         if self.method not in METHODS:
@@ -62,19 +75,70 @@ class CollectiveConfig:
             raise ValueError(f"unknown compression {self.compression!r}")
 
 
-def _pick(method: str, p: int, nbytes: int, model: cm.CommModel) -> str:
+_RUNNABLE = ("dptree", "sptree", "redbcast", "ring", "hier", "psum")
+
+# XLA primitive equivalent per supported elementwise op (psum-family).
+_PRIMITIVE_REDUCE = {jnp.add: jax.lax.psum, jnp.maximum: jax.lax.pmax,
+                     jnp.minimum: jax.lax.pmin}
+
+
+def _degrade_for_op(algo: str, op, method: str) -> str:
+    """Reroute an algorithm pick that cannot run this operator.
+
+    ring/hier reduce in ring order (commutative ops only) and psum only has
+    primitive equivalents for add/max/min. Under ``auto`` every such pick
+    silently degrades to the rank-ordered dptree — auto must never raise on
+    an op/model/cache combination. An EXPLICIT hier request raises (a new
+    API, so a loud contract); explicit ring/psum keep their documented
+    behavior and error paths.
+    """
+    unsupported = ((algo in ("ring", "hier") and op not in _COMMUTATIVE_OPS)
+                   or (algo == "psum" and op not in _PRIMITIVE_REDUCE))
+    if not unsupported:
+        return algo
+    if method == "auto":
+        return "dptree"
+    if algo == "hier":
+        raise ValueError(
+            "method='hier' requires a commutative op (jnp.add/maximum/"
+            "minimum/multiply); use dptree for merely-associative ops")
+    return algo
+
+
+def _pick(method: str, p: int, nbytes: int, config: "CollectiveConfig",
+          dtype) -> tuple:
+    """(algorithm, measured_num_blocks | None, hier_group_size | None)."""
     if method != "auto":
-        return method
+        return method, None, config.group_size
+    # Empirical closed loop first: a measured (algorithm, blocks) for this
+    # exact (p, bytes, dtype, fabric) beats any model prediction — but only
+    # if the recorded setting is actually runnable here ('auto' must degrade,
+    # never raise, on a stale or foreign cache entry).
+    hit = autotune.lookup(p, int(max(nbytes, 1)), str(dtype),
+                          config.comm_model.name)
+    if hit is not None and hit.algorithm in _RUNNABLE:
+        if hit.algorithm != "hier":
+            return hit.algorithm, max(1, int(hit.num_blocks)), None
+        # Replay ONLY the group shape the entry was measured with; an entry
+        # without one (old schema) is stale — fall through to the model.
+        from repro.core.topology import resolve_group_size
+        gs = resolve_group_size(p, hit.group_size) if hit.group_size else None
+        if gs is not None:
+            return "hier", max(1, int(hit.num_blocks)), gs
     # psum is XLA's own allreduce; we only auto-pick among algorithms whose
     # cost we model. The paper's point stands: never let the library guess.
-    return cm.best_algorithm(p, float(max(nbytes, 1)), model)
+    algo = cm.best_algorithm(p, float(max(nbytes, 1)), config.comm_model,
+                             group_size=config.group_size,
+                             intra_model=config.intra_model)
+    return algo, None, config.group_size
 
 
-def _nblocks(num_blocks, p, nbytes, model, algorithm):
+def _nblocks(num_blocks, p, nbytes, model, algorithm, group_size=None):
     if num_blocks is not None:
         return int(num_blocks)
-    if algorithm in ("dptree", "sptree", "redbcast"):
-        return cm.optimal_blocks(p, float(max(nbytes, 1)), model, algorithm)
+    if algorithm in ("dptree", "sptree", "redbcast", "hier"):
+        return cm.optimal_blocks(p, float(max(nbytes, 1)), model, algorithm,
+                                 group_size=group_size)
     return 1
 
 
@@ -118,10 +182,37 @@ def all_reduce(x: jax.Array, axis_name: str, p: int,
     if config.compression == "bf16" and flat.dtype == jnp.float32:
         flat = flat.astype(jnp.bfloat16)
     nbytes = flat.size * flat.dtype.itemsize
-    algo = _pick(config.method, p, nbytes, config.comm_model)
-    nb = _nblocks(config.num_blocks, p, nbytes, config.comm_model, algo)
+    algo, nb_measured, hier_gs = _pick(config.method, p, nbytes, config,
+                                       flat.dtype)
+    new_algo = _degrade_for_op(algo, op, config.method)
+    if new_algo != algo:
+        algo, nb_measured = new_algo, None
+    if algo != "psum":
+        from repro import compat
+        if compat.partial_manual_trace():
+            # Old-jax partial-manual shard_map: XLA aborts on ppermute, so
+            # the schedule-based algorithms cannot lower — the primitive
+            # reductions are the only sound path there (numerically
+            # identical for the commutative ops they cover).
+            if op not in _PRIMITIVE_REDUCE:
+                raise ValueError(
+                    "old-jax partial-manual region: only jnp.add/maximum/"
+                    "minimum reductions are supported (ppermute cannot "
+                    "lower here); got an unmapped op")
+            algo = "psum"
+    nb = (nb_measured if config.num_blocks is None and nb_measured is not None
+          else _nblocks(config.num_blocks, p, nbytes, config.comm_model,
+                        algo, config.group_size))
     if algo == "psum":
-        out = jax.lax.psum(flat, axis_name)
+        # route through the matching primitive: psum with op=max would
+        # silently sum.
+        try:
+            prim = _PRIMITIVE_REDUCE[op]
+        except KeyError:
+            raise ValueError(
+                "method='psum' supports only jnp.add/maximum/minimum ops; "
+                "use a schedule-based method for custom operators") from None
+        out = prim(flat, axis_name)
     elif algo == "dptree":
         out = dptree_allreduce(flat, axis_name, p, num_blocks=nb, op=op,
                                carry_spec=carry_spec)
@@ -132,6 +223,9 @@ def all_reduce(x: jax.Array, axis_name: str, p: int,
         out = redbcast_allreduce(flat, axis_name, p, num_blocks=nb, op=op)
     elif algo == "ring":
         out = ring_allreduce(flat, axis_name, p, op=op)
+    elif algo == "hier":
+        out = hier_allreduce(flat, axis_name, p, group_size=hier_gs,
+                             num_blocks=nb, op=op, carry_spec=carry_spec)
     else:  # pragma: no cover
         raise AssertionError(algo)
     if out.ndim == 2:
@@ -257,7 +351,8 @@ def bucketed_all_reduce(tree: Any, axis_name: str, p: int,
 
 
 def _mesh_axis_size(name: str) -> int | None:
-    env = jax.sharding.get_abstract_mesh()
+    from repro import compat
+    env = compat.get_abstract_mesh()
     if env is None or env.empty:
         return None
     shape = dict(env.shape_tuple)

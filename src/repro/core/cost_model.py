@@ -17,6 +17,7 @@ This module provides:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 import numpy as np
@@ -32,6 +33,7 @@ __all__ = [
     "sptree_time",
     "redbcast_time",
     "ring_time",
+    "hier_time",
     "optimal_blocks",
     "best_algorithm",
 ]
@@ -122,8 +124,41 @@ def ring_time(p: int, m_bytes: float, model: CommModel,
     return steps * (model.exchange(chunk) + model.gamma * chunk)
 
 
+def hier_time(p: int, m_bytes: float, b: int, model: CommModel,
+              group_size: int = 4,
+              intra_model: CommModel | None = None) -> float:
+    """Two-level hierarchical allreduce on a heterogeneous fabric.
+
+    ``model`` prices the slow inter-group links (e.g. ``TPU_V5E_INTERPOD``
+    DCN); ``intra_model`` (default ``TPU_V5E`` ICI) prices the fast
+    intra-group ring. Stage costs:
+
+    * intra reduce-scatter + all-gather: ``2*(s-1)`` steps of a bidirectional
+      ring exchanging ``m/(2s)`` bytes each — the ``2*beta*m*(s-1)/s`` terms
+      on the FAST links,
+    * inter dptree over the ``m/s``-byte shard stripes on the SLOW links —
+      the wire term the hierarchy divides by the group factor.
+    """
+    if p == 1:
+        return 0.0
+    s = int(group_size)
+    if s <= 1 or p % s:
+        return dptree_time(p, m_bytes, b, model)
+    intra_model = intra_model or TPU_V5E
+    g = p // s
+    if g == 1:
+        return ring_time(s, m_bytes, intra_model)
+    shard = m_bytes / s
+    half = shard / 2.0
+    intra = 2 * (s - 1) * (intra_model.exchange(half)
+                           + intra_model.gamma * half)
+    return intra + dptree_time(g, shard, b, model)
+
+
+@functools.lru_cache(maxsize=4096)
 def optimal_blocks(p: int, m_bytes: float, model: CommModel,
-                   algorithm: str = "dptree") -> int:
+                   algorithm: str = "dptree",
+                   group_size: int | None = None) -> int:
     """Pipelining-Lemma block count: balance the +3b alpha term vs beta*m/b.
 
     For ``T(b) = (L + c*b)(alpha + beta*m/b)``, the optimum is
@@ -132,6 +167,16 @@ def optimal_blocks(p: int, m_bytes: float, model: CommModel,
     """
     if p == 1 or m_bytes <= 0:
         return 1
+    if algorithm == "hier":
+        # blocks pipeline the inter-group stage: a dptree over num_groups
+        # ranks moving the m/s-byte shard stripes. group_size=None resolves
+        # the same way hier_allreduce resolves it (4, then 2, then flat) so
+        # the block count matches the shape that actually executes.
+        from repro.core.topology import default_group_size
+        s = int(group_size) if group_size else default_group_size(p)
+        if s <= 1 or p % s or p // s == 1:
+            return optimal_blocks(p, m_bytes, model, "dptree")
+        return optimal_blocks(p // s, m_bytes / s, model, "dptree")
     if algorithm == "dptree":
         topo = build_dual_tree(p)
         c = float(max(1, len(topo.active_classes())))
@@ -152,14 +197,54 @@ def optimal_blocks(p: int, m_bytes: float, model: CommModel,
     beta_eff = model.beta + model.gamma
     b = math.sqrt(lat * beta_eff * m_bytes / (c * model.alpha))
     b = int(max(1, min(b, m_bytes / 64)))
-    return max(1, b)
+    return _refine_blocks(max(1, b), p, m_bytes, model, algorithm)
 
 
-def best_algorithm(p: int, m_bytes: float, model: CommModel) -> str:
+_TIME_FNS = {}  # populated below; algorithm -> T(p, m_bytes, b, model)
+
+
+def _refine_blocks(b: int, p: int, m_bytes: float, model: CommModel,
+                   algorithm: str) -> int:
+    """Local descent around the analytic optimum.
+
+    The continuous Pipelining-Lemma ``b*`` ignores integer macro-round effects
+    (step counts only change every third block), which can leave the analytic
+    pick several percent off at small ``m``. Descend over halvings/doublings
+    and +-1 until no neighbor is faster — at termination ``T(b) <= T(b//2)``
+    and ``T(b) <= T(2b)`` hold by construction.
+    """
+    time_fn = _TIME_FNS[algorithm]
+    best, t_best = b, time_fn(p, m_bytes, b, model)
+    for _ in range(40):
+        moved = False
+        for cand in {max(1, best // 2), max(1, best - 1), best + 1, 2 * best}:
+            if cand == best:
+                continue
+            t = time_fn(p, m_bytes, cand, model)
+            if t < t_best:
+                best, t_best, moved = cand, t, True
+        if not moved:
+            return best
+    return best
+
+
+_TIME_FNS.update({
+    "dptree": dptree_time,
+    "sptree": sptree_time,
+    "redbcast": redbcast_time,
+})
+
+
+def best_algorithm(p: int, m_bytes: float, model: CommModel,
+                   group_size: int | None = None,
+                   intra_model: CommModel | None = None) -> str:
     """Size-adaptive switch (what OpenMPI got wrong in the paper's Table 2).
 
     Evaluates every implemented algorithm at its own best block size and picks
     the fastest. Small m -> tree (log-latency); huge m -> ring (bandwidth).
+    With a valid ``group_size`` the two-level hierarchical composition also
+    competes (it wins on heterogeneous fabrics where ``model`` prices slow
+    inter-group links and ``intra_model`` fast intra-group ones).
     """
     cands = {
         "dptree": dptree_time(p, m_bytes, optimal_blocks(p, m_bytes, model, "dptree"), model),
@@ -167,6 +252,12 @@ def best_algorithm(p: int, m_bytes: float, model: CommModel) -> str:
         "redbcast": redbcast_time(p, m_bytes, optimal_blocks(p, m_bytes, model, "redbcast"), model),
         "ring": ring_time(p, m_bytes, model),
     }
+    from repro.core.topology import resolve_group_size
+    s = resolve_group_size(p, group_size) if group_size else None
+    if s is not None:
+        b = optimal_blocks(p, m_bytes, model, "hier", group_size=s)
+        cands["hier"] = hier_time(p, m_bytes, b, model, group_size=s,
+                                  intra_model=intra_model)
     return min(cands, key=cands.get)
 
 

@@ -2,7 +2,7 @@
 
 All functions here must be called *inside* a ``jax.shard_map`` region that is
 manual over ``axis_name``. Device-varying control is expressed with
-``jax.lax.axis_index`` + gathers from host-built topology constants; the three
+``axis_index`` + gathers from host-built topology constants; the three
 static edge classes become three pairs of ``ppermute`` permutations executed
 per macro-round inside a ``lax.scan``.
 
@@ -12,24 +12,44 @@ partial blocks toward the roots while the down-permutation carries finished
 result blocks toward the leaves, i.e. the "telephone-like" bidirectional
 exchange realized on full-duplex ICI links.
 
+The shared tree engine is *fused*: the three edge-class steps of a macro-round
+share one slice/update plumbing scheme —
+
+* one ``take(jC)`` feeds both the C-role up-send and the root's dual-combine
+  (the seed engine materialized that dynamic slice twice per step);
+* masked writes land in a scratch block row instead of read-modify-writing the
+  current value, removing two more dynamic slices per step;
+* for commutative operators the child0 partial received at a node's A-step is
+  *deferred* in a carried register and folded into the B-step's combine, so
+  the two child combines plus the local block become ONE three-operand
+  elementwise pass (``kernels.block_combine.combine3`` on TPU — a single HBM
+  round-trip — with a fused-jnp fallback on interpret/CPU), and the root's
+  dual-combine likewise rides that same pass instead of a second one.
+
+Non-commutative (merely associative) operators keep the exact seed ordering
+(Algorithm 1's ``t (.) Y`` / lower-root ``Y (.) t`` rules) on a general path.
+
 Implemented algorithms:
 
 * :func:`dptree_allreduce`  — doubly-pipelined dual-root (the paper, Alg. 1)
 * :func:`sptree_allreduce`  — single-tree doubly-pipelined variant (§1.2)
 * :func:`redbcast_allreduce`— pipelined reduce + pipelined bcast (User-Allreduce1)
 * :func:`ring_allreduce`    — bidirectional ring reduce-scatter + all-gather
+* :func:`hier_allreduce`    — two-level: intra-group ring reduce-scatter,
+  inter-group dptree over shard stripes, intra-group all-gather
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.topology import (NO_NODE, TreeTopology, build_dual_tree,
+from repro import compat
+from repro.core.topology import (NO_NODE, HierarchicalTopology, TreeTopology,
+                                 build_dual_tree, build_hierarchy,
                                  build_single_tree)
 
 __all__ = [
@@ -37,9 +57,40 @@ __all__ = [
     "sptree_allreduce",
     "redbcast_allreduce",
     "ring_allreduce",
+    "hier_allreduce",
 ]
 
 Op = Callable[[jax.Array, jax.Array], jax.Array]
+
+# Operators the fused engine may reassociate/commute, by kernel name.
+_COMMUTATIVE_OPS = {jnp.add: "add", jnp.maximum: "max", jnp.minimum: "min",
+                    jnp.multiply: "mul"}
+_OPS_BY_NAME = {v: k for k, v in _COMMUTATIVE_OPS.items()}
+
+
+def _op_identity(op_name: str, dtype) -> jax.Array:
+    if op_name == "add":
+        return jnp.zeros((), dtype)
+    if op_name == "mul":
+        return jnp.ones((), dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        # True infinities, not finfo.min/max: payloads legitimately contain
+        # -inf (masked logits), which must win against the identity.
+        return jnp.asarray(-jnp.inf if op_name == "max" else jnp.inf, dtype)
+    info = jnp.iinfo(dtype)
+    return jnp.asarray(info.min if op_name == "max" else info.max, dtype)
+
+
+def _combine3_local(a, b, c, op_name: str) -> jax.Array:
+    """Fused ``op(op(a, b), c)``: one HBM pass via the Pallas kernel on real
+    TPUs (1-D float blocks), fused jnp elsewhere (interpret/CPU, lane-sharded
+    2-D payloads — where GSPMD owns the layout)."""
+    if (jax.default_backend() == "tpu" and a.ndim == 1
+            and a.dtype in (jnp.float32, jnp.bfloat16)):
+        from repro.kernels import block_combine
+        return block_combine.combine3(a, b, c, op=op_name, interpret=False)
+    f = _OPS_BY_NAME[op_name]
+    return f(f(a, b), c)
 
 
 def _blockify(x: jax.Array, b: int) -> tuple:
@@ -59,8 +110,6 @@ def _const(arr: np.ndarray, i: jax.Array) -> jax.Array:
     return jnp.asarray(arr)[i]
 
 
-
-
 def _pin_lanes(x: jax.Array, spec=None) -> jax.Array:
     """Pin the carry sharding INSIDE scan bodies — GSPMD does not reliably
     propagate it into while-loops, and an unpinned carry replicates the whole
@@ -75,10 +124,92 @@ def _pin_lanes(x: jax.Array, spec=None) -> jax.Array:
     return maybe_shard(x, spec)
 
 
+def _take(Y: jax.Array, idx: jax.Array, b: int) -> jax.Array:
+    # dynamic_slice, not gather: scalar-index gathers over arrays with
+    # GSPMD-sharded trailing dims crash XLA's gather partitioner at
+    # high device counts; dynamic-slice partitions cleanly. Reads clip to
+    # the real blocks [0, b-1]; the scratch row b is write-only.
+    return jax.lax.dynamic_slice_in_dim(
+        Y, jnp.clip(idx, 0, b - 1), 1, axis=0)[0]
+
+
+def _put(Y: jax.Array, val: jax.Array, row: jax.Array) -> jax.Array:
+    return jax.lax.dynamic_update_slice(Y, val[None],
+                                        (row,) + (0,) * (Y.ndim - 1))
+
+
+# --------------------------------------------------------------------------
+# Shared ring machinery. ring_allreduce runs it over the whole axis
+# (idx = rank, size = p); hier_allreduce runs it within each group
+# (idx = local rank, size = group_size, per-group perms). One schedule and
+# one chunk layout, one implementation — a fix to either applies to both.
+# --------------------------------------------------------------------------
+
+def _ring_layout(x: jax.Array, n: int, bidirectional: bool) -> tuple:
+    """Chunk a vector for an n-way ring: (halves, chunk, m, trail).
+
+    An odd per-rank chunk is padded up to even under ``bidirectional`` so the
+    two opposite-direction half-schedules move the same byte count (unequal
+    halves would make one direction the straggler on every step).
+    """
+    m = x.shape[0]
+    trail = x.shape[1:]
+    chunk = -(-m // n)
+    if bidirectional and chunk >= 2 and chunk % 2:
+        chunk += 1
+    pad = n * chunk - m
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + trail, x.dtype)], axis=0)
+    X = x.reshape((n, chunk) + trail)
+    halves = ([X[:, :chunk // 2], X[:, chunk // 2:]]
+              if (bidirectional and chunk >= 2) else [X])
+    return halves, chunk, m, trail
+
+
+def _ring_unlayout(out_halves, n: int, chunk: int, m: int, trail) -> jax.Array:
+    X = (jnp.concatenate(out_halves, axis=1) if len(out_halves) > 1
+         else out_halves[0])
+    return X.reshape((n * chunk,) + trail)[:m]
+
+def _ring_reduce_scatter(H, axis_name, idx, size, perm, sg, op,
+                         carry_spec=None):
+    """size-1 steps; afterwards the chunk ``mod(idx + sg, size)`` is fully
+    reduced on this rank."""
+    def rs_step(H, t):
+        send_idx = jnp.mod(idx - sg * t, size)
+        buf = jax.lax.dynamic_slice_in_dim(H, send_idx, 1, axis=0)[0]
+        buf = jax.lax.ppermute(buf, axis_name, perm)
+        recv_idx = jnp.mod(idx - sg * (t + 1), size)
+        cur = jax.lax.dynamic_slice_in_dim(H, recv_idx, 1, axis=0)[0]
+        return jax.lax.dynamic_update_slice(
+            H, op(cur, buf)[None], (recv_idx,) + (0,) * (H.ndim - 1))
+
+    H, _ = jax.lax.scan(
+        lambda hh, t: (_pin_lanes(rs_step(hh, t), carry_spec), ()),
+        _pin_lanes(H, carry_spec), jnp.arange(size - 1, dtype=jnp.int32))
+    return H
+
+
+def _ring_all_gather(H, axis_name, idx, size, perm, sg, carry_spec=None):
+    """size-1 steps circulating each rank's owned chunk ``mod(idx+sg, size)``."""
+    def ag_step(H, t):
+        send_idx = jnp.mod(idx + sg * (1 - t), size)
+        buf = jax.lax.dynamic_slice_in_dim(H, send_idx, 1, axis=0)[0]
+        buf = jax.lax.ppermute(buf, axis_name, perm)
+        recv_idx = jnp.mod(idx - sg * t, size)
+        return jax.lax.dynamic_update_slice(
+            H, buf[None], (recv_idx,) + (0,) * (H.ndim - 1))
+
+    H, _ = jax.lax.scan(
+        lambda hh, t: (_pin_lanes(ag_step(hh, t), carry_spec), ()),
+        _pin_lanes(H, carry_spec), jnp.arange(size - 1, dtype=jnp.int32))
+    return H
+
+
 def _tree_allreduce(x: jax.Array, axis_name: str, topo: TreeTopology,
                     num_blocks: int, op: Op, op_rev: Op | None,
                     carry_spec=None) -> jax.Array:
-    """Shared engine for the dual-root and single-tree variants."""
+    """Shared fused engine for the dual-root and single-tree variants."""
     p = topo.p
     if p == 1:
         return x
@@ -86,8 +217,14 @@ def _tree_allreduce(x: jax.Array, axis_name: str, topo: TreeTopology,
     Y, m = _blockify(x, b)
     blk = Y.shape[1]
     op_rev = op_rev or op
+    op_name = _COMMUTATIVE_OPS.get(op) if op_rev is op else None
+    fused = op_name is not None
 
-    i = jax.lax.axis_index(axis_name)
+    # Scratch block row b: masked writes land here instead of paying a
+    # read-modify-write of the current value (two extra dynamic slices).
+    Y = jnp.concatenate([Y, jnp.zeros((1,) + Y.shape[1:], Y.dtype)], axis=0)
+
+    i = compat.axis_index(axis_name)
     phi = _const(topo.phi, i)
     dep = _const(topo.depth, i)
     has_c0 = _const(topo.child0 != NO_NODE, i)
@@ -99,9 +236,61 @@ def _tree_allreduce(x: jax.Array, axis_name: str, topo: TreeTopology,
 
     classes = topo.active_classes()
     R = topo.num_macro_rounds(b)
+    in_range = lambda j: (j >= 0) & (j < b)
 
-    def step(Y, s, e):
-        """One global step on edge class ``e`` (two paired ppermutes)."""
+    if fused:
+        ident = jnp.full((blk,) + Y.shape[2:], _op_identity(op_name, Y.dtype),
+                         Y.dtype)
+
+    def step_fused(Y, pend, s, e):
+        """One edge-class step. A node's roles rotate A->B->C over consecutive
+        global steps (residue of ``phi`` mod 3), so the child0 partial it
+        receives at its A-step can be deferred in the carried ``pend`` and
+        folded into the NEXT step — its B-slot, same block index — making the
+        two child combines plus the local block a single three-operand pass
+        that the root's dual-combine also rides (one HBM pass, not two)."""
+        rel = s - phi
+        mod = jnp.mod(rel, 3)
+        jA = jnp.floor_divide(rel, 3)
+        jB = jnp.floor_divide(rel - 1, 3)
+        jC = jnp.floor_divide(rel - 2, 3)
+        slotB = mod == 1
+        amA = (mod == 0) & has_c0
+        amC_par = (mod == 2) & has_par
+        amC_root = (mod == 2) & is_root & dual_active
+        jAB = jnp.where(mod == 0, jA, jB)
+
+        # --- payloads (one slice each; up_out doubles as the root's block) --
+        up_out = _take(Y, jC, b)          # C-role: partial block up / dual
+        down_out = _take(Y, jAB - dep - 1, b)  # A/B-role: result block down
+        # --- the bidirectional exchange (one full-duplex step) -------------
+        t_up = jax.lax.ppermute(up_out, axis_name, topo.up_pairs[e])
+        t_down = (jax.lax.ppermute(down_out, axis_name, topo.down_pairs[e])
+                  if topo.down_pairs[e] else jnp.zeros_like(down_out))
+        # --- one fused combine pass ----------------------------------------
+        # No operand masking: wherever the write below lands in a REAL row,
+        # t_up is a genuine partial (a parent's in-range jA/jB coincides with
+        # its child's in-range jC send on the shared edge, and the dual roots
+        # share phi), and pend is identity except at the B-slot by
+        # construction. Writes that would see stale t_up are masked to the
+        # scratch row, so their comb value is discarded.
+        validA = amA & in_range(jA)
+        cur_b = _take(Y, jB, b)
+        comb = _combine3_local(t_up, pend,
+                               jnp.where(slotB, cur_b, up_out), op_name)
+        new_pend = jnp.where(validA, t_up, ident)
+        # --- masked write (scratch row when idle) --------------------------
+        jRecv = jC - dep                  # result block index from the parent
+        upd_val = jnp.where(amC_par, t_down, comb)
+        upd_idx = jnp.where(slotB, jB, jnp.where(amC_root, jC, jRecv))
+        do_upd = ((slotB & has_c1 & in_range(jB))
+                  | (amC_root & in_range(jC))
+                  | (amC_par & in_range(jRecv)))
+        row = jnp.where(do_upd, jnp.clip(upd_idx, 0, b - 1), b)
+        return _put(Y, upd_val, row), new_pend
+
+    def step_general(Y, s, e):
+        """Seed-ordered path for non-commutative operators (Alg. 1 rules)."""
         rel = s - phi
         mod = jnp.mod(rel, 3)
         jA = jnp.floor_divide(rel, 3)
@@ -114,49 +303,51 @@ def _tree_allreduce(x: jax.Array, axis_name: str, topo: TreeTopology,
         amAB = amA | amB
         jAB = jnp.where(amA, jA, jB)
 
-        def take(idx):
-            # dynamic_slice, not gather: scalar-index gathers over arrays with
-            # GSPMD-sharded trailing dims crash XLA's gather partitioner at
-            # high device counts; dynamic-slice partitions cleanly.
-            return jax.lax.dynamic_slice_in_dim(
-                Y, jnp.clip(idx, 0, b - 1), 1, axis=0)[0]
-
-        in_range = lambda j: (j >= 0) & (j < b)
-        # --- payloads ---------------------------------------------------
-        up_out = take(jC)                 # C-role: partial block to parent/dual
-        jD = jAB - dep - 1                # A/B-role: result block to the child
-        down_out = take(jD)
-        # --- the bidirectional exchange (one full-duplex step) -----------
+        up_out = _take(Y, jC, b)          # C-role payload AND current block
+        down_out = _take(Y, jAB - dep - 1, b)
         t_up = jax.lax.ppermute(up_out, axis_name, topo.up_pairs[e])
         t_down = (jax.lax.ppermute(down_out, axis_name, topo.down_pairs[e])
                   if topo.down_pairs[e] else jnp.zeros_like(down_out))
-        # --- apply ------------------------------------------------------
-        cur_ab = take(jAB)
+        cur_ab = _take(Y, jAB, b)
         red_ab = op(t_up, cur_ab)         # Alg. 1 lines 4/6: t (.) Y
-        cur_c = take(jC)
-        red_root = jnp.where(is_lower_root, op_rev(cur_c, t_up),  # Y (.) t
-                             op(t_up, cur_c))                     # t (.) Y
-        jRecv = jC - dep                  # result block index from the parent
+        red_root = jnp.where(is_lower_root, op_rev(up_out, t_up),  # Y (.) t
+                             op(t_up, up_out))                     # t (.) Y
+        jRecv = jC - dep
         upd_idx = jnp.where(amAB, jAB, jnp.where(amC_root, jC, jRecv))
         upd_val = jnp.where(amAB, red_ab,
                             jnp.where(amC_root, red_root, t_down))
         do_upd = ((amAB & in_range(jAB))
                   | (amC_root & in_range(jC))
                   | (amC_par & in_range(jRecv)))
-        ci = jnp.clip(upd_idx, 0, b - 1)
-        cur_ci = jax.lax.dynamic_slice_in_dim(Y, ci, 1, axis=0)[0]
-        new_val = jnp.where(do_upd, upd_val, cur_ci)
-        return jax.lax.dynamic_update_slice(Y, new_val[None],
-                                    (ci,) + (0,) * (Y.ndim - 1))
+        row = jnp.where(do_upd, jnp.clip(upd_idx, 0, b - 1), b)
+        return _put(Y, upd_val, row)
 
-    def macro_round(Y, r):
-        s0 = 3 * r
-        for e in classes:
-            Y = step(Y, s0 + e, e)
-        return _pin_lanes(Y, carry_spec), ()
+    pend_spec = None
+    if carry_spec is not None:
+        from jax.sharding import PartitionSpec as _P
+        pend_spec = _P(*tuple(carry_spec)[1:])  # carry_spec covers (b, ...)
 
-    Y, _ = jax.lax.scan(macro_round, _pin_lanes(Y, carry_spec),
-                        jnp.arange(R, dtype=jnp.int32))
+    if fused:
+        def macro_round(carry, r):
+            Y, pend = carry
+            s0 = 3 * r
+            for e in classes:
+                Y, pend = step_fused(Y, pend, s0 + e, e)
+            return (_pin_lanes(Y, carry_spec), _pin_lanes(pend, pend_spec)), ()
+
+        (Y, _), _ = jax.lax.scan(
+            macro_round, (_pin_lanes(Y, carry_spec), ident),
+            jnp.arange(R, dtype=jnp.int32))
+    else:
+        def macro_round(Y, r):
+            s0 = 3 * r
+            for e in classes:
+                Y = step_general(Y, s0 + e, e)
+            return _pin_lanes(Y, carry_spec), ()
+
+        Y, _ = jax.lax.scan(macro_round, _pin_lanes(Y, carry_spec),
+                            jnp.arange(R, dtype=jnp.int32))
+    Y = Y[:b]  # drop the scratch row
     return Y.reshape((b * Y.shape[1],) + Y.shape[2:])[:m]
 
 
@@ -192,6 +383,80 @@ def sptree_allreduce(x: jax.Array, axis_name: str, p: int, *,
 
 
 # --------------------------------------------------------------------------
+# Hierarchical (two-level) allreduce: intra-group bidirectional-ring
+# reduce-scatter -> inter-group dptree over the scattered shard stripes ->
+# intra-group all-gather. With group size s, the slow inter-group fabric
+# carries ~3*beta*m/s instead of 3*beta*m; the fast intra-group links absorb
+# the 2*beta*m*(s-1)/s scatter/gather terms.
+# --------------------------------------------------------------------------
+
+def hier_allreduce(x: jax.Array, axis_name: str, p: int, *,
+                   group_size: int | None = None,
+                   num_blocks: int = 16,
+                   op: Op = jnp.add,
+                   htopo: HierarchicalTopology | None = None,
+                   carry_spec=None,
+                   bidirectional: bool = True) -> jax.Array:
+    """Two-level hierarchical allreduce (node-aware composition).
+
+    ``op`` must be commutative and associative (the ring stages reduce in
+    ring order, not rank order) — sums, max/min, products. Groups are
+    contiguous rank blocks of ``group_size`` (``None`` picks 4, then 2, then
+    flat); stripe ``j`` — the ranks with local index ``j`` in each group —
+    runs its own inter-group dual-root tree, all stripes concurrently through
+    the same three ppermute classes.
+    """
+    if p == 1:
+        return x
+    h = htopo or build_hierarchy(p, group_size)
+    assert h.p == p, (h.p, p)
+    s, g = h.group_size, h.num_groups
+    if s == 1:  # one rank per group: plain flat dptree over all ranks
+        nb = max(1, min(int(num_blocks), x.shape[0]))
+        return _tree_allreduce(x, axis_name, h.inter_topo, nb, op, None,
+                               carry_spec)
+    if g == 1:  # one group spanning the axis: pure intra-group ring
+        return ring_allreduce(x, axis_name, p, op=op,
+                              bidirectional=bidirectional)
+
+    halves, chunk, m, trail = _ring_layout(x, s, bidirectional)
+    i = compat.axis_index(axis_name)
+    li = jnp.mod(i, s)
+    perms = [h.ring_fwd, h.ring_bwd][: len(halves)]
+    signs = [1, -1][: len(halves)]
+
+    # ---- stage 1: intra-group bidirectional ring reduce-scatter ----------
+    reduced, shards = [], []
+    for H, perm, sg in zip(halves, perms, signs):
+        H = _ring_reduce_scatter(H, axis_name, li, s, perm, sg, op,
+                                 carry_spec)
+        own = jnp.mod(li + sg, s)  # chunk this rank now fully owns
+        reduced.append(H)
+        shards.append(jax.lax.dynamic_slice_in_dim(H, own, 1, axis=0)[0])
+
+    # ---- stage 2: inter-group dptree allreduce over the shard stripes ----
+    shard_vec = (jnp.concatenate(shards, axis=0) if len(shards) > 1
+                 else shards[0])
+    nb = max(1, min(int(num_blocks), shard_vec.shape[0]))
+    shard_red = _tree_allreduce(shard_vec, axis_name, h.inter_topo, nb,
+                                op, None, carry_spec)
+
+    # ---- stage 3: intra-group ring all-gather ----------------------------
+    pieces, off = [], 0
+    for hh in halves:
+        pieces.append(shard_red[off:off + hh.shape[1]])
+        off += hh.shape[1]
+    outs = []
+    for H, perm, sg, piece in zip(reduced, perms, signs, pieces):
+        own = jnp.mod(li + sg, s)
+        H = jax.lax.dynamic_update_slice(
+            H, piece[None], (own,) + (0,) * (H.ndim - 1))
+        outs.append(_ring_all_gather(H, axis_name, li, s, perm, sg,
+                                     carry_spec))
+    return _ring_unlayout(outs, s, chunk, m, trail)
+
+
+# --------------------------------------------------------------------------
 # User-Allreduce1: pipelined binary-tree reduce followed by pipelined bcast.
 # Period-2 schedules; sends to the parent overlap receives from a child in the
 # same step (different partners — MPI_Sendrecv-style), so one permutation per
@@ -218,9 +483,10 @@ def redbcast_allreduce(x: jax.Array, axis_name: str, p: int, *,
         return x
     b = max(1, min(int(num_blocks), x.shape[0]))
     Y, m = _blockify(x, b)
+    # scratch row for masked writes (same trick as the tree engine)
+    Y = jnp.concatenate([Y, jnp.zeros((1,) + Y.shape[1:], Y.dtype)], axis=0)
 
-    i = jax.lax.axis_index(axis_name)
-    dep_np = topo.depth
+    i = compat.axis_index(axis_name)
     dmax = topo.max_depth
 
     # ---------------- reduce phase (period 2, up-traffic only) -----------
@@ -243,27 +509,21 @@ def redbcast_allreduce(x: jax.Array, axis_name: str, p: int, *,
     S1 = int(phi1_np[topo.roots[0]]) + 2 * b
     R1 = -(-S1 // 2)
 
-    def take(Y, idx):
-        return jax.lax.dynamic_slice_in_dim(
-            Y, jnp.clip(idx, 0, b - 1), 1, axis=0)[0]
-
     def rstep(Y, s, e):
         rel = s - phi1
         even = jnp.mod(rel, 2) == 0
         j_send = jnp.floor_divide(rel - 2, 2)       # send up at phi1+2j+2
         j_r0 = jnp.floor_divide(rel, 2)             # recv child0 at phi1+2j
         j_r1 = jnp.floor_divide(rel - 1, 2)         # recv child1 at phi1+2j+1
-        up_out = take(Y, j_send)
+        up_out = _take(Y, j_send, b)
         t = jax.lax.ppermute(up_out, axis_name, up_cls[e]) if up_cls[e] \
             else jnp.zeros_like(up_out)
         jr = jnp.where(even, j_r0, j_r1)
         ok = (((even & has_c0) | (~even & has_c1))
               & (jr >= 0) & (jr < b))
-        cur = take(Y, jr)
-        val = jnp.where(ok, op(t, cur), cur)
-        ci = jnp.clip(jr, 0, b - 1)
-        return jax.lax.dynamic_update_slice(Y, val[None],
-                                            (ci,) + (0,) * (Y.ndim - 1))
+        cur = _take(Y, jr, b)
+        row = jnp.where(ok, jnp.clip(jr, 0, b - 1), b)
+        return _put(Y, op(t, cur), row)
 
     def rround(Y, r):
         for e in (0, 1):
@@ -301,14 +561,12 @@ def redbcast_allreduce(x: jax.Array, axis_name: str, p: int, *,
         j_s0 = jnp.floor_divide(rel, 2)             # send c0 at sigma+2j
         j_s1 = jnp.floor_divide(rel - 1, 2)         # send c1 at sigma+2j+1
         j_rcv = jnp.floor_divide(rel + 1, 2)        # recv parent at sigma+2j-1
-        out = take(Y, jnp.where(even, j_s0, j_s1))
+        out = _take(Y, jnp.where(even, j_s0, j_s1), b)
         t = jax.lax.ppermute(out, axis_name, dn_cls[e]) if dn_cls[e] \
             else jnp.zeros_like(out)
         ok = has_par & (jnp.mod(rel, 2) == 1) & (j_rcv >= 0) & (j_rcv < b)
-        ci = jnp.clip(j_rcv, 0, b - 1)
-        val = jnp.where(ok, t, take(Y, j_rcv))
-        return jax.lax.dynamic_update_slice(Y, val[None],
-                                            (ci,) + (0,) * (Y.ndim - 1))
+        row = jnp.where(ok, jnp.clip(j_rcv, 0, b - 1), b)
+        return _put(Y, t, row)
 
     def bround(Y, r):
         for e in (0, 1):
@@ -318,6 +576,7 @@ def redbcast_allreduce(x: jax.Array, axis_name: str, p: int, *,
 
     Y, _ = jax.lax.scan(bround, _pin_lanes(Y),
                         jnp.arange(R2, dtype=jnp.int32))
+    Y = Y[:b]
     return Y.reshape((b * Y.shape[1],) + Y.shape[2:])[:m]
 
 
@@ -329,47 +588,20 @@ def ring_allreduce(x: jax.Array, axis_name: str, p: int, *,
                    op: Op = jnp.add, bidirectional: bool = True) -> jax.Array:
     """Ring allreduce; with ``bidirectional=True`` the vector is split in two
     halves circulating in opposite directions, halving the beta term on
-    full-duplex links."""
+    full-duplex links. An odd per-rank chunk is padded up to even so the two
+    half-schedules move the same byte count (unequal halves would make one
+    direction the straggler on every step)."""
     if p == 1:
         return x
-    m = x.shape[0]
-    trail = x.shape[1:]
-    chunk = -(-m // p)
-    pad = p * chunk - m
-    if pad:
-        x = jnp.concatenate([x, jnp.zeros((pad,) + trail, x.dtype)], axis=0)
-    X = x.reshape((p, chunk) + trail)
-    i = jax.lax.axis_index(axis_name)
-    fwd = [(k, (k + 1) % p) for k in range(p)]
-    bwd = [((k + 1) % p, k) for k in range(p)]
+    halves, chunk, m, trail = _ring_layout(x, p, bidirectional)
+    i = compat.axis_index(axis_name)
+    fwd = tuple((k, (k + 1) % p) for k in range(p))
+    bwd = tuple(((k + 1) % p, k) for k in range(p))
 
-    halves = ([X[:, :chunk // 2], X[:, chunk // 2:]]
-              if (bidirectional and chunk >= 2) else [X])
     dirs = [fwd, bwd][: len(halves)]
     signs = [1, -1][: len(halves)]
     out_halves = []
     for H, perm, sg in zip(halves, dirs, signs):
-        def rs_step(H, t):
-            send_idx = jnp.mod(i - sg * t, p)
-            buf = jax.lax.dynamic_slice_in_dim(H, send_idx, 1, axis=0)[0]
-            buf = jax.lax.ppermute(buf, axis_name, perm)
-            recv_idx = jnp.mod(i - sg * (t + 1), p)
-            cur = jax.lax.dynamic_slice_in_dim(H, recv_idx, 1, axis=0)[0]
-            return jax.lax.dynamic_update_slice(
-                H, op(cur, buf)[None],
-                (recv_idx,) + (0,) * (H.ndim - 1)), ()
-        H, _ = jax.lax.scan(lambda h, t: (_pin_lanes(rs_step(h, t)[0]), ()),
-                            _pin_lanes(H), jnp.arange(p - 1, dtype=jnp.int32))
-
-        def ag_step(H, t):
-            send_idx = jnp.mod(i + sg * (1 - t), p)
-            buf = jax.lax.dynamic_slice_in_dim(H, send_idx, 1, axis=0)[0]
-            buf = jax.lax.ppermute(buf, axis_name, perm)
-            recv_idx = jnp.mod(i - sg * t, p)
-            return jax.lax.dynamic_update_slice(
-                H, buf[None], (recv_idx,) + (0,) * (H.ndim - 1)), ()
-        H, _ = jax.lax.scan(lambda h, t: (_pin_lanes(ag_step(h, t)[0]), ()),
-                            _pin_lanes(H), jnp.arange(p - 1, dtype=jnp.int32))
-        out_halves.append(H)
-    X = jnp.concatenate(out_halves, axis=1) if len(out_halves) > 1 else out_halves[0]
-    return X.reshape((p * chunk,) + trail)[:m]
+        H = _ring_reduce_scatter(H, axis_name, i, p, perm, sg, op)
+        out_halves.append(_ring_all_gather(H, axis_name, i, p, perm, sg))
+    return _ring_unlayout(out_halves, p, chunk, m, trail)

@@ -26,14 +26,18 @@ SPMD implementation needs:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
 import numpy as np
 
 __all__ = [
     "TreeTopology",
+    "HierarchicalTopology",
     "build_dual_tree",
     "build_single_tree",
+    "build_hierarchy",
+    "expand_tree_over_stripes",
     "validate_topology",
 ]
 
@@ -147,11 +151,15 @@ def _assign_phi(p: int, c0: np.ndarray, c1: np.ndarray, roots: Sequence[int],
     return phi
 
 
+@functools.lru_cache(maxsize=1024)
 def build_dual_tree(p: int) -> TreeTopology:
     """The paper's topology: two post-order trees over ranks [0, p0) and [p0, p).
 
     ``p0 = ceil(p/2)`` so the lower tree is never the smaller one. ``p == 1``
     degenerates to a single node; ``p == 2`` to the bare dual-root exchange.
+    Memoized: the cost model's block-count descent evaluates T(b) many times
+    per call and each evaluation needs the topology; treat the result (and
+    its numpy arrays) as read-only.
     """
     if p < 1:
         raise ValueError(f"p must be >= 1, got {p}")
@@ -177,8 +185,10 @@ def build_dual_tree(p: int) -> TreeTopology:
                         up, down)
 
 
+@functools.lru_cache(maxsize=1024)
 def build_single_tree(p: int) -> TreeTopology:
-    """Single doubly-pipelined tree (paper §1.2 remark): root = p-1, no dual."""
+    """Single doubly-pipelined tree (paper §1.2 remark): root = p-1, no dual.
+    Memoized; treat the result as read-only."""
     if p < 1:
         raise ValueError(f"p must be >= 1, got {p}")
     parent = np.full(p, NO_NODE, dtype=np.int32)
@@ -192,6 +202,107 @@ def build_single_tree(p: int) -> TreeTopology:
     up, down = _edge_classes(p, parent, phi, roots)
     return TreeTopology(p, False, parent, c0, c1, depth, phi, roots, tree_id,
                         up, down)
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchicalTopology:
+    """Two-level topology: ``p`` ranks in ``num_groups`` contiguous groups of
+    ``group_size`` (fast intra-group links, e.g. a 4-chip ICI node), with a
+    dual tree over the *groups* for the slow inter-group fabric.
+
+    ``inter_topo`` instantiates that group tree once per shard stripe
+    ``j in [0, group_size)`` — stripe ``j`` is the rank set
+    ``{q * group_size + j}`` — expanded into a single p-rank
+    :class:`TreeTopology` whose three ppermute classes carry all stripes'
+    (disjoint) edges at once. ``ring_fwd``/``ring_bwd`` are the intra-group
+    ring permutations for the reduce-scatter / all-gather stages.
+    """
+
+    p: int
+    group_size: int
+    num_groups: int
+    group_tree: TreeTopology    # dual tree over the num_groups groups
+    inter_topo: TreeTopology    # group tree expanded over all stripes
+    ring_fwd: tuple             # intra-group ring, +1 direction
+    ring_bwd: tuple             # intra-group ring, -1 direction
+
+
+def expand_tree_over_stripes(gt: TreeTopology, s: int) -> TreeTopology:
+    """Instantiate a g-node tree once per stripe ``j in [0, s)``.
+
+    Group-tree node ``q`` of stripe ``j`` becomes global rank ``q*s + j``;
+    the stripes are rank-disjoint, so the union of their edges still forms
+    three valid (each src/dst at most once) ppermute classes.
+
+    NOTE: the result is an *engine schedule*, not a paper tree —
+    :func:`validate_topology` does not apply to it. ``roots`` lists only the
+    stripe-0 representatives (the engine tests ``len(roots) == 2`` for the
+    dual exchange; per-rank root-ness comes from ``parent == NO_NODE``), and
+    ``child0 == i-1`` holds per group tree, not per expanded rank. The
+    contract is checked by ``test_hierarchy_stripe_expansion_invariants``.
+    """
+    if s == 1:
+        return gt
+    g, p = gt.p, gt.p * s
+
+    def node_map(arr):
+        out = np.full(p, NO_NODE, dtype=np.int32)
+        for q in range(g):
+            if arr[q] != NO_NODE:
+                out[q * s:(q + 1) * s] = \
+                    int(arr[q]) * s + np.arange(s, dtype=np.int32)
+        return out
+
+    def val_map(arr):
+        return np.repeat(np.asarray(arr), s).astype(arr.dtype)
+
+    expand_pairs = lambda classes: tuple(
+        tuple((a * s + j, c * s + j) for (a, c) in cls for j in range(s))
+        for cls in classes)
+
+    return TreeTopology(
+        p=p, dual=gt.dual,
+        parent=node_map(gt.parent), child0=node_map(gt.child0),
+        child1=node_map(gt.child1), depth=val_map(gt.depth),
+        phi=val_map(gt.phi),
+        roots=tuple(int(r) * s for r in gt.roots),  # stripe-0 representatives
+        tree_id=val_map(gt.tree_id),
+        up_pairs=expand_pairs(gt.up_pairs),
+        down_pairs=expand_pairs(gt.down_pairs))
+
+
+def default_group_size(p: int) -> int:
+    """Largest of {4, 2} dividing p, else 1 (flat)."""
+    for s in (4, 2):
+        if p % s == 0 and p // s >= 1:
+            return s
+    return 1
+
+
+def resolve_group_size(p: int, group_size: int | None = None) -> int | None:
+    """The group size a two-level hierarchy would execute with, or None if a
+    proper two-level shape is infeasible. THE single feasibility rule — the
+    auto switch, the cost model, and the benches must all consult this."""
+    s = int(group_size) if group_size else default_group_size(p)
+    return s if (s > 1 and p % s == 0 and p // s >= 2) else None
+
+
+@functools.lru_cache(maxsize=512)
+def build_hierarchy(p: int, group_size: int | None = None) -> HierarchicalTopology:
+    """Contiguous groups of ``group_size`` ranks + a dual tree over groups.
+    Memoized; treat the result as read-only."""
+    if p < 1:
+        raise ValueError(f"p must be >= 1, got {p}")
+    s = default_group_size(p) if group_size is None else int(group_size)
+    if s < 1 or p % s != 0:
+        raise ValueError(f"group_size {s} must divide p={p}")
+    g = p // s
+    gt = build_dual_tree(g)
+    inter = expand_tree_over_stripes(gt, s)
+    fwd = tuple((q * s + k, q * s + (k + 1) % s)
+                for q in range(g) for k in range(s)) if s > 1 else ()
+    bwd = tuple((dst, src) for (src, dst) in fwd)
+    return HierarchicalTopology(p, s, g, gt, inter, fwd, bwd)
 
 
 def validate_topology(topo: TreeTopology) -> None:

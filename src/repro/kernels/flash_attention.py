@@ -39,10 +39,12 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, bk: int, scale: float,
 
     def body(ki, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(ki * bk, bk),
-                            slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(ki * bk, bk),
-                            slice(None))).astype(jnp.float32)
+        # slice(0, 1) + [0], not a bare int index: interpret mode's NDIndexer
+        # rejects raw python ints in mixed-index pl.load tuples.
+        k = pl.load(k_ref, (slice(0, 1), pl.dslice(ki * bk, bk),
+                            slice(None)))[0].astype(jnp.float32)
+        v = pl.load(v_ref, (slice(0, 1), pl.dslice(ki * bk, bk),
+                            slice(None)))[0].astype(jnp.float32)
         s = q @ k.T                                    # (bq, bk)
         qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
         kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)

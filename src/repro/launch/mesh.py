@@ -24,16 +24,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     if len(devs) < need:
         raise RuntimeError(f"mesh {shape} needs {need} devices, "
                            f"have {len(devs)} (set XLA_FLAGS host device count)")
-    return jax.make_mesh(
-        shape, axes, devices=devs[:need],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    from repro import compat
+    return compat.make_mesh(shape, axes, devices=devs[:need])
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests / local runs), Auto axis types."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    from repro import compat
+    return compat.make_mesh(shape, axes)
 
 
 def make_local_mesh():

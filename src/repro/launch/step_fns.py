@@ -32,6 +32,8 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+from repro.compat import shard_map
 from repro.configs.base import ParallelConfig, ShapeSuite
 from repro.core.collectives import (CollectiveConfig, all_reduce,
                                     bucketed_all_reduce)
@@ -142,6 +144,14 @@ def make_train_step(cfg, pcfg: ParallelConfig, mesh,
     dp = _dp_axes(mesh)
     manual = dp if pcfg.dp_mode == "manual" else tuple(
         a for a in dp if a == "pod" and pcfg.pod_sync == "dptree")
+    if manual and not compat.HAS_AXIS_TYPE \
+            and set(mesh.axis_names) - set(manual):
+        # Old-jax XLA cannot compile a *partial*-manual shard_map over the
+        # full model body (ppermute / sort / top_k all hit manual-subgroup
+        # CHECK failures in the SPMD partitioner). Fall back to the pure
+        # GSPMD-auto regime: GSPMD emits the gradient reduction itself.
+        manual = ()
+        pcfg = dataclasses.replace(pcfg, dp_mode="fsdp")
     sizes = {a: mesh.shape[a] for a in mesh.axis_names}
     ptot = int(np.prod([sizes[a] for a in manual])) if manual else 1
     pspecs = (model_pspecs(cfg, mesh) if pcfg.dp_mode == "manual"
@@ -196,7 +206,7 @@ def make_train_step(cfg, pcfg: ParallelConfig, mesh,
 
     if manual:
         bspec = P(manual if len(manual) > 1 else manual[0])
-        grad_fn = jax.shard_map(
+        grad_fn = shard_map(
             grad_body, mesh=mesh, in_specs=(P(), bspec),
             out_specs=(P(), P()), axis_names=set(manual), check_vma=False)
     else:

@@ -130,7 +130,7 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--collective", default=None,
-                    help="override: dptree|sptree|redbcast|ring|psum|auto")
+                    help="override: dptree|sptree|redbcast|ring|hier|psum|auto")
     ap.add_argument("--max-restarts", type=int, default=3)
     args = ap.parse_args(argv)
 

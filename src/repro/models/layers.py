@@ -56,18 +56,20 @@ def maybe_shard(x: jax.Array, spec: P | None) -> jax.Array:
     why batch dims must be named here rather than left None."""
     if spec is None:
         return x
-    env = jax.sharding.get_abstract_mesh()
+    from repro import compat
+    if not compat.HAS_AXIS_TYPE and compat.in_manual_trace():
+        # Old-jax partial-manual shard_map: XLA cannot express a NamedSharding
+        # constraint inside the manual subgroup (hard CHECK failure). Layout
+        # pinning is a memory/perf hint, so dropping it is safe here.
+        return x
+    env = compat.get_abstract_mesh()
     concrete = None
     if env is None or env.empty or not env.shape_tuple:
         if not _MESH_STACK:
             return x
         concrete = _MESH_STACK[-1]
         env = concrete.abstract_mesh
-    try:
-        types = dict(zip(env.axis_names, env.axis_types))
-    except Exception:
-        types = {a: jax.sharding.AxisType.Auto for a in env.axis_names}
-    auto = {a for a, t in types.items() if t == jax.sharding.AxisType.Auto}
+    auto = compat.auto_axes(env)
 
     def fix(entry):
         if entry is None:

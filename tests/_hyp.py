@@ -1,0 +1,92 @@
+"""Hypothesis with a bare-environment fallback.
+
+Tier-1 must pass on a container without ``hypothesis`` installed (see
+requirements-dev.txt for the optional dev deps). When hypothesis is present we
+re-export the real ``given``/``settings``/``st``; otherwise a thin deterministic
+shim runs each property test over boundary values plus a fixed pseudo-random
+sample, so the property suites still execute (with less adversarial coverage)
+instead of failing at collection.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    _FALLBACK_MAX_EXAMPLES = 12  # keep bare-env runs fast
+
+    class _Strategy:
+        """A sampler plus the boundary examples always tried first."""
+
+        def __init__(self, sampler, boundary=()):
+            self.sampler = sampler
+            self.boundary = tuple(boundary)
+
+        def sample(self, rng):
+            return self.sampler(rng)
+
+    class _StModule:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                             (min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                             (min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: rng.choice(seq), seq[:1])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)),
+                             (False, True))
+
+    st = _StModule()
+
+    def settings(max_examples=None, deadline=None, **_kw):
+        def deco(fn):
+            if max_examples is not None:
+                fn._hyp_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        names = sorted(strategies)
+
+        def deco(fn):
+            # NOT functools.wraps: __wrapped__ would make pytest introspect
+            # the original signature and demand fixtures for strategy params.
+            def wrapper(*args, **kwargs):
+                n = min(getattr(wrapper, "_hyp_max_examples", 20),
+                        _FALLBACK_MAX_EXAMPLES)
+                rng = random.Random(0xD9_7EEE)
+                cases = []
+                # boundary case: every strategy at its first boundary value
+                cases.append({k: (strategies[k].boundary[0]
+                                  if strategies[k].boundary
+                                  else strategies[k].sample(rng))
+                              for k in names})
+                while len(cases) < n:
+                    cases.append({k: strategies[k].sample(rng) for k in names})
+                for case in cases:
+                    fn(*args, **case, **kwargs)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._hyp_max_examples = getattr(fn, "_hyp_max_examples", 20)
+            return wrapper
+        return deco
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

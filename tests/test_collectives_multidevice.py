@@ -22,8 +22,9 @@ def run_sub(body: str, devices: int = 8, timeout: int = 560):
         sys.path.insert(0, {ROOT + '/src'!r})
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
-        mesh = jax.make_mesh(({devices},), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro import compat
+        shard_map = compat.shard_map
+        mesh = compat.make_mesh(({devices},), ("data",))
         p = {devices}
     """) + textwrap.dedent(body)
     r = subprocess.run([sys.executable, "-c", script], capture_output=True,
@@ -51,7 +52,7 @@ def test_all_methods_match_sum():
         ]
         for name, fn in cases:
             body = lambda x: fn(x[0])[None]
-            sm = jax.shard_map(body, mesh=mesh, in_specs=P("data", None),
+            sm = shard_map(body, mesh=mesh, in_specs=P("data", None),
                                out_specs=P("data", None))
             out = np.asarray(jax.jit(sm)(jnp.asarray(X)))
             for r in range(p):
@@ -70,7 +71,7 @@ def test_2d_row_pipelined_payloads():
         for fn in (lambda x: dptree_allreduce(x, "data", p, num_blocks=5),
                    lambda x: ring_allreduce(x, "data", p)):
             body = lambda x: fn(x[0])[None]
-            sm = jax.shard_map(body, mesh=mesh, in_specs=P("data", None, None),
+            sm = shard_map(body, mesh=mesh, in_specs=P("data", None, None),
                                out_specs=P("data", None, None))
             out = np.asarray(jax.jit(sm)(jnp.asarray(X)))
             for r in range(p):
@@ -94,7 +95,7 @@ def test_dptree_non_commutative_matches_simulator():
         body = lambda x: dptree_allreduce(x[0].reshape(-1), "data", p,
                                           num_blocks=3, op=mm_flat,
                                           op_rev=mm_flat).reshape(12, 2, 2)[None]
-        sm = jax.shard_map(body, mesh=mesh, in_specs=P("data", None, None, None),
+        sm = shard_map(body, mesh=mesh, in_specs=P("data", None, None, None),
                            out_specs=P("data", None, None, None))
         out = np.asarray(jax.jit(sm)(jnp.asarray(Xm)))
         for r in range(p):
@@ -120,7 +121,7 @@ def test_bucketed_and_structured_api():
             body = lambda t: jax.tree.map(lambda l: l[None],
                 bucketed_all_reduce(jax.tree.map(lambda l: l[0], t),
                                     "data", p, cfg))
-            sm = jax.shard_map(body, mesh=mesh, in_specs=P("data"),
+            sm = shard_map(body, mesh=mesh, in_specs=P("data"),
                                out_specs=P("data"))
             out = jax.jit(sm)(stacked)
             for k in tree:
@@ -144,7 +145,7 @@ def test_bucketed_and_structured_api():
         body = lambda t: jax.tree.map(lambda l: l[None],
             structured_all_reduce(jax.tree.map(lambda l: l[0], t),
                                   "data", p, comb))
-        sm = jax.shard_map(body, mesh=mesh, in_specs=P("data"),
+        sm = shard_map(body, mesh=mesh, in_specs=P("data"),
                            out_specs=P("data"))
         out = jax.jit(sm)(stacked2)
         for k in want2:
@@ -156,6 +157,119 @@ def test_bucketed_and_structured_api():
     """)
 
 
+def test_fused_max_allreduce_with_infinities():
+    """The fused engine's deferred-combine identity must be a true infinity:
+    max-allreduce over payloads containing -inf (masked logits) has to return
+    -inf, not finfo.min."""
+    run_sub("""
+        from repro.core.dptree import dptree_allreduce
+        rng = np.random.default_rng(5)
+        X = rng.standard_normal((p, 64)).astype(np.float32)
+        X[:, :8] = -np.inf          # every rank masked -> max stays -inf
+        X[1:, 8:16] = -np.inf       # one live rank
+        want = X.max(0)
+        for op, opname in ((jnp.maximum, "max"), (jnp.minimum, "min")):
+            w = want if opname == "max" else (-X).min(0)
+            Xi = X if opname == "max" else -X
+            body = lambda x: dptree_allreduce(x[0], "data", p, num_blocks=4,
+                                              op=op)[None]
+            sm = shard_map(body, mesh=mesh, in_specs=P("data", None),
+                           out_specs=P("data", None))
+            out = np.asarray(jax.jit(sm)(jnp.asarray(Xi)))
+            for r in range(p):
+                np.testing.assert_array_equal(out[r], w, err_msg=opname)
+        print("ok")
+    """)
+
+
+def test_hier_allreduce_matches_psum():
+    """Two-level hierarchical allreduce vs psum ground truth: groups of 2 and
+    4, odd/degenerate sizes, both bidirectional settings."""
+    run_sub("""
+        from repro.core.dptree import hier_allreduce
+        rng = np.random.default_rng(7)
+        for m in (1, 2, 5, 37, 103, 1001):
+            X = rng.standard_normal((p, m)).astype(np.float32)
+            want = X.sum(0)
+            for gs in (2, 4):
+                for bidi in (True, False):
+                    fn = lambda x: hier_allreduce(x, "data", p, group_size=gs,
+                                                  num_blocks=3,
+                                                  bidirectional=bidi)
+                    sm = shard_map(lambda x: fn(x[0])[None], mesh=mesh,
+                                   in_specs=P("data", None),
+                                   out_specs=P("data", None))
+                    out = np.asarray(jax.jit(sm)(jnp.asarray(X)))
+                    for r in range(p):
+                        np.testing.assert_allclose(
+                            out[r], want, rtol=1e-5, atol=1e-5,
+                            err_msg=f"m={m} gs={gs} bidi={bidi}")
+        print("ok")
+    """)
+
+
+def test_hier_via_collective_config():
+    """method='hier' through the public all_reduce/bucketed API."""
+    run_sub("""
+        from repro.core.collectives import CollectiveConfig, all_reduce
+        rng = np.random.default_rng(8)
+        X = rng.standard_normal((p, 257)).astype(np.float32)
+        cfg = CollectiveConfig(method="hier", group_size=4)
+        sm = shard_map(lambda x: all_reduce(x[0], "data", p, cfg)[None],
+                       mesh=mesh, in_specs=P("data", None),
+                       out_specs=P("data", None))
+        out = np.asarray(jax.jit(sm)(jnp.asarray(X)))
+        for r in range(p):
+            np.testing.assert_allclose(out[r], X.sum(0), rtol=1e-5, atol=1e-5)
+        print("ok")
+    """)
+
+
+def test_ring_odd_chunk_and_odd_p():
+    """Bidirectional ring at odd per-rank chunk (guarded by even-padding) and
+    non-power-of-two p."""
+    for d, m in ((5, 35), (7, 91), (8, 36)):  # chunk = 7, 13, 5 (odd)
+        run_sub(f"""
+            from repro.core.dptree import ring_allreduce
+            rng = np.random.default_rng(3)
+            m = {m}
+            X = rng.standard_normal((p, m)).astype(np.float32)
+            for bidi in (True, False):
+                body = lambda x: ring_allreduce(x[0], "data", p,
+                                                bidirectional=bidi)[None]
+                sm = shard_map(body, mesh=mesh, in_specs=P("data", None),
+                               out_specs=P("data", None))
+                out = np.asarray(jax.jit(sm)(jnp.asarray(X)))
+                for r in range(p):
+                    np.testing.assert_allclose(out[r], X.sum(0), rtol=2e-5,
+                                               atol=2e-5)
+            print("ok")
+        """, devices=d)
+
+
+def test_fused_engine_hlo_slice_count():
+    """The fused engine's scan body holds 3 dynamic slices per edge-class step
+    (the seed's step had 5: the jC slice was materialized twice and every
+    masked write paid a read-modify-write slice)."""
+    run_sub("""
+        from repro.core.dptree import dptree_allreduce
+        X = jnp.ones((p, 999), jnp.float32)
+        sm = shard_map(lambda x: dptree_allreduce(x[0], "data", p,
+                                                  num_blocks=8)[None],
+                       mesh=mesh, in_specs=P("data", None),
+                       out_specs=P("data", None))
+        txt = jax.jit(sm).lower(X).as_text()
+        n_slice = txt.count("stablehlo.dynamic_slice")
+        n_upd = txt.count("stablehlo.dynamic_update_slice")
+        # fused: 3 classes x 3 takes in the scan body + 6 one-time topology
+        # constant lookups = 15. The seed engine traced 3 x 5 takes (jC
+        # twice + a read-modify-write slice per masked update) + 6 = 21.
+        assert 0 < n_slice <= 15, (n_slice, n_upd)
+        assert n_upd <= 3, n_upd
+        print("ok", n_slice, n_upd)
+    """)
+
+
 def test_odd_device_counts():
     """Non-power-of-two p exercises the unbalanced tree paths."""
     for d in (3, 5, 7):
@@ -164,7 +278,7 @@ def test_odd_device_counts():
             rng = np.random.default_rng(2)
             X = rng.standard_normal((p, 29)).astype(np.float32)
             body = lambda x: dptree_allreduce(x[0], "data", p, num_blocks=4)[None]
-            sm = jax.shard_map(body, mesh=mesh, in_specs=P("data", None),
+            sm = shard_map(body, mesh=mesh, in_specs=P("data", None),
                                out_specs=P("data", None))
             out = np.asarray(jax.jit(sm)(jnp.asarray(X)))
             for r in range(p):

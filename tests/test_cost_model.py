@@ -2,8 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.core import cost_model as cm
 
@@ -52,6 +51,41 @@ def test_sptree_latency_worse_than_dptree():
     model = cm.TPU_V5E
     b = 16
     assert cm.dptree_time(p, m, b, model) <= cm.sptree_time(p, m, b, model)
+
+
+def test_hier_beats_flat_dptree_on_interpod():
+    """Acceptance: on the heterogeneous TPU_V5E_INTERPOD fabric the two-level
+    hierarchy must win from 1 MiB up (slow-link traffic / group factor)."""
+    p, s = 256, 4
+    model = cm.TPU_V5E_INTERPOD
+    for m in (1 << 20, 4 << 20, 16 << 20, 64 << 20):
+        b_h = cm.optimal_blocks(p, m, model, "hier", group_size=s)
+        b_d = cm.optimal_blocks(p, m, model, "dptree")
+        t_h = cm.hier_time(p, m, b_h, model, group_size=s)
+        t_d = cm.dptree_time(p, m, b_d, model)
+        assert t_h < t_d, (m, t_h, t_d)
+    assert cm.best_algorithm(p, 1 << 20, model, group_size=s) == "hier"
+
+
+def test_hier_time_degenerate_groups():
+    model = cm.TPU_V5E_INTERPOD
+    m = 1 << 20
+    # group_size 1 / non-divisor falls back to flat dptree
+    b = cm.optimal_blocks(256, m, model, "dptree")
+    assert cm.hier_time(256, m, b, model, group_size=1) \
+        == cm.dptree_time(256, m, b, model)
+    assert cm.hier_time(256, m, b, model, group_size=7) \
+        == cm.dptree_time(256, m, b, model)
+    # single group = pure intra ring
+    assert cm.hier_time(8, m, 4, model, group_size=8) \
+        == cm.ring_time(8, m, cm.TPU_V5E)
+
+
+def test_best_algorithm_without_group_size_unchanged():
+    p = 256
+    model = cm.TPU_V5E
+    assert cm.best_algorithm(p, 64 * 1024, model) in ("dptree", "sptree")
+    assert cm.best_algorithm(p, 1 << 30, model) == "ring"
 
 
 def test_predicted_table_shape():

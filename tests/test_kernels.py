@@ -3,8 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.ops import (block_combine2, block_combine3, kv_dequantize,

@@ -2,8 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.core.simulator import count_active_steps, simulate_allreduce
 from repro.core.topology import build_dual_tree

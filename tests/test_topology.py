@@ -2,8 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.core.topology import (NO_NODE, build_dual_tree, build_single_tree,
                                  validate_topology)
@@ -58,6 +57,53 @@ def test_balanced_case_exact():
         topo = build_dual_tree(p)
         assert topo.roots == (p // 2 - 1, p - 1)
         assert topo.max_depth == h - 2
+
+
+@settings(max_examples=30, deadline=None)
+@given(g=st.integers(min_value=1, max_value=40),
+       s=st.sampled_from([1, 2, 3, 4, 8]))
+def test_hierarchy_stripe_expansion_invariants(g, s):
+    from repro.core.topology import build_hierarchy
+    p = g * s
+    h = build_hierarchy(p, s)
+    assert (h.num_groups, h.group_size) == (g, s)
+    it, gt = h.inter_topo, h.group_tree
+    assert it.p == p
+    # per-rank schedule constants replicate the group tree's along stripes
+    for q in range(g):
+        for j in range(s):
+            r = q * s + j
+            assert it.phi[r] == gt.phi[q]
+            assert it.depth[r] == gt.depth[q]
+            pa = gt.parent[q]
+            assert it.parent[r] == (NO_NODE if pa == NO_NODE else pa * s + j)
+    # expanded ppermute classes stay valid permutations (stripes disjoint)
+    for pairs in it.up_pairs + it.down_pairs:
+        srcs = [a for a, _ in pairs]
+        dsts = [c for _, c in pairs]
+        assert len(set(srcs)) == len(srcs)
+        assert len(set(dsts)) == len(dsts)
+        # every edge stays inside its stripe
+        for a, c in pairs:
+            assert a % s == c % s
+    # edge count: s stripes x group-tree edges
+    n_up_group = sum(len(c) for c in gt.up_pairs)
+    assert sum(len(c) for c in it.up_pairs) == s * n_up_group
+    # intra-group ring never crosses a group boundary
+    for a, c in h.ring_fwd:
+        assert a // s == c // s
+
+
+def test_hierarchy_rejects_bad_group_size():
+    from repro.core.topology import build_hierarchy
+    with pytest.raises(ValueError):
+        build_hierarchy(8, 3)
+    with pytest.raises(ValueError):
+        build_hierarchy(8, 0)
+    # default picks 4 | 2 | 1
+    assert build_hierarchy(8).group_size == 4
+    assert build_hierarchy(6).group_size == 2
+    assert build_hierarchy(5).group_size == 1
 
 
 def test_p1_p2_degenerate():
