@@ -3,10 +3,14 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test bench bench-collectives
+.PHONY: verify test docs-check bench bench-collectives
 
 verify:
 	$(PY) -m pytest -x -q
+	$(PY) tools/check_docs.py
+
+docs-check:
+	$(PY) tools/check_docs.py
 
 test: verify
 

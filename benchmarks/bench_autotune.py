@@ -21,7 +21,8 @@ from repro.core import cost_model as cm
 
 SIZES = [10_000, 1_000_000]  # f32 elements
 DEVICES = 8
-GROUP_SIZE = 4
+GROUP_SIZE = (2, 2)   # 3-level spec: 2-chip ring, 2-node ring, tree over 2
+COMPRESS = True       # also time the bf16 slow-stage wire candidates
 ALGORITHMS = ("dptree", "sptree", "redbcast", "ring", "hier")
 
 
@@ -43,9 +44,11 @@ def _measure_candidates(m_elems: int, cands, devices=DEVICES, reps=3):
                         jnp.float32)
         out = {{}}
         for algo, b in {list(cands)}:
-            cfg = CollectiveConfig(method=algo, num_blocks=b,
-                                   group_size={GROUP_SIZE} if algo == "hier"
-                                   else None)
+            base = algo.removesuffix("+bf16")
+            cfg = CollectiveConfig(method=base, num_blocks=b,
+                                   group_size={GROUP_SIZE!r} if base == "hier"
+                                   else None,
+                                   compress_inter_group=algo != base)
             body = lambda x: all_reduce(x[0], "data", p, cfg)[None]
             f = jax.jit(shard_map(body, mesh=mesh, in_specs=P("data", None),
                                   out_specs=P("data", None)))
@@ -73,7 +76,8 @@ def run(csv_out):
         nbytes = m * 4
         cands = at.candidate_settings(DEVICES, nbytes, model,
                                       algorithms=ALGORITHMS,
-                                      group_size=GROUP_SIZE)
+                                      group_size=GROUP_SIZE,
+                                      compress_inter_group=COMPRESS)
         measured = _measure_candidates(m, cands)
         for (algo, b), secs in sorted(measured.items(),
                                       key=lambda kv: kv[1]):
@@ -84,9 +88,11 @@ def run(csv_out):
             return measured[(algo, str(b))]
 
         best = at.tune(runner, DEVICES, nbytes, "float32", "cpu8", model,
-                       algorithms=ALGORITHMS, group_size=GROUP_SIZE)
+                       algorithms=ALGORITHMS, group_size=GROUP_SIZE,
+                       compress_inter_group=COMPRESS)
+        tag = "+bf16" if best.compressed else ""
         csv_out(f"autotune_cpu8/winner/m={m}",
-                f"{best.algorithm}/b={best.num_blocks}",
+                f"{best.algorithm}{tag}/b={best.num_blocks}",
                 f"{best.time_s * 1e6:.1f} us -> cached for method='auto'")
     # round-trip proof: the cache hit is what auto would now use
     for m in SIZES:

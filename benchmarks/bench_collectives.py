@@ -22,10 +22,18 @@ import textwrap
 import numpy as np
 
 from repro.core import cost_model as cm
-from repro.core.topology import resolve_group_size
+from repro.core.topology import resolve_levels
 
 SIZES = [1_000, 10_000, 100_000, 1_000_000, 4_000_000]  # f32 elements
 METHODS = ["dptree", "sptree", "redbcast", "ring", "hier", "psum"]
+# label -> CollectiveConfig kwargs; the hierarchical variants measured next
+# to the flat methods: two-level (4-chip groups), three-level (2-chip ring
+# inside a 2-node ring inside the pod tree), and the bf16 slow-stage wire.
+CASES = ([(m, {"method": m, "group_size": 4 if m == "hier" else None})
+          for m in METHODS]
+         + [("hier3", {"method": "hier", "levels": (2, 2)}),
+            ("hier3_bf16", {"method": "hier", "levels": (2, 2),
+                            "compress_inter_group": True})])
 
 
 def measured_rows(devices: int = 8, reps: int = 5):
@@ -45,10 +53,8 @@ def measured_rows(devices: int = 8, reps: int = 5):
         for m in {SIZES}:
             X = jnp.asarray(np.random.default_rng(0).standard_normal((p, m)),
                             jnp.float32)
-            for method in {METHODS}:
-                cfg = CollectiveConfig(
-                    method=method,
-                    group_size=4 if method == "hier" else None)
+            for method, kw in {CASES}:
+                cfg = CollectiveConfig(**kw)
                 body = lambda x: all_reduce(x[0], "data", p, cfg)[None]
                 f = jax.jit(shard_map(body, mesh=mesh,
                                       in_specs=P("data", None),
@@ -70,7 +76,8 @@ def measured_rows(devices: int = 8, reps: int = 5):
     return json.loads(line[len("RESULT "):])
 
 
-def predicted_rows(p: int, model: cm.CommModel, group_size: int = 4):
+def predicted_rows(p: int, model: cm.CommModel, group_size: int = 4,
+                   levels3: tuple = (4, 4)):
     rows = []
     for m in SIZES:
         nbytes = m * 4
@@ -81,12 +88,20 @@ def predicted_rows(p: int, model: cm.CommModel, group_size: int = 4):
         rows.append((m, "redbcast", cm.redbcast_time(
             p, nbytes, cm.optimal_blocks(p, nbytes, model, "redbcast"), model) * 1e6))
         rows.append((m, "ring", cm.ring_time(p, nbytes, model) * 1e6))
-        gs = resolve_group_size(p, group_size) if group_size else None
-        if gs is not None:
-            rows.append((m, "hier", cm.hier_time(
+        for label, spec in (("hier", group_size), ("hier3", levels3)):
+            lv = resolve_levels(p, spec) if spec else None
+            if lv is None:
+                continue
+            rows.append((m, label, cm.hier_time(
                 p, nbytes,
-                cm.optimal_blocks(p, nbytes, model, "hier", group_size=gs),
-                model, group_size=gs) * 1e6))
+                cm.optimal_blocks(p, nbytes, model, "hier", group_size=lv),
+                model, group_size=lv) * 1e6))
+            if label == "hier3":
+                rows.append((m, "hier3_bf16", cm.hier_time(
+                    p, nbytes,
+                    cm.optimal_blocks(p, nbytes, model, "hier",
+                                      group_size=lv, compression="bf16"),
+                    model, group_size=lv, compression="bf16") * 1e6))
     return rows
 
 

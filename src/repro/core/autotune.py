@@ -18,7 +18,12 @@ the loop empirically:
 Cache entries are keyed by ``(p, nbytes, dtype, topology)`` where ``topology``
 is the :class:`~repro.core.cost_model.CommModel` name (or any caller-chosen
 topology tag, e.g. ``"cpu8"`` for the virtual-device bench), so results from
-different fabrics never cross-contaminate.
+different fabrics never cross-contaminate. A ``hier`` winner additionally
+records the exact hierarchy level spec it was timed with and whether the
+slow-stage bf16 wire was on (``compressed``); ``auto`` replays only that
+exact configuration — and the compressed variant only for configs that set
+``compress_inter_group`` themselves. Format and contract:
+``docs/autotuning.md``.
 """
 
 from __future__ import annotations
@@ -35,6 +40,7 @@ from repro.core import cost_model as cm
 __all__ = [
     "TuneResult",
     "AutotuneCache",
+    "COMPRESSED_SUFFIX",
     "candidate_settings",
     "tune",
     "lookup",
@@ -54,9 +60,13 @@ class TuneResult:
     algorithm: str
     num_blocks: int
     time_s: float
-    # group shape a 'hier' winner was measured with; replayed on cache hits
+    # group shape a 'hier' winner was measured with — an int (two-level) or
+    # a level tuple (N-level, innermost ring first); replayed on cache hits
     # so the consumer never executes a configuration that was never timed.
-    group_size: int | None = None
+    group_size: int | tuple | None = None
+    # whether the winner was timed with the bf16 inter-group wire; replayed
+    # only when the consuming config also opts into the lossy compression.
+    compressed: bool = False
 
 
 def _key(p: int, nbytes: int, dtype: str, topology: str) -> str:
@@ -132,9 +142,13 @@ class AutotuneCache:
             return None
         try:
             gs = e.get("group_size")
+            if gs is not None:
+                # JSON round-trips level tuples as lists; ints stay ints.
+                gs = tuple(int(s) for s in gs) if isinstance(gs, (list, tuple)) \
+                    else int(gs)
             return TuneResult(str(e["algorithm"]), int(e["num_blocks"]),
-                              float(e.get("time_s", 0.0)),
-                              int(gs) if gs is not None else None)
+                              float(e.get("time_s", 0.0)), gs,
+                              bool(e.get("compressed", False)))
         except (KeyError, TypeError, ValueError):
             return None
 
@@ -142,11 +156,13 @@ class AutotuneCache:
             result: TuneResult) -> None:
         self._ensure()
         with self._lock:
+            gs = result.group_size
             self._entries[_key(p, nbytes, dtype, topology)] = {
                 "algorithm": result.algorithm,
                 "num_blocks": int(result.num_blocks),
                 "time_s": float(result.time_s),
-                "group_size": result.group_size,
+                "group_size": list(gs) if isinstance(gs, tuple) else gs,
+                "compressed": bool(result.compressed),
             }
 
     def __len__(self) -> int:
@@ -173,10 +189,21 @@ def reset_cache() -> None:
     _CACHE, _CACHE_PATH = None, None
 
 
+COMPRESSED_SUFFIX = "+bf16"
+
+
 def candidate_settings(p: int, nbytes: int, model: cm.CommModel,
                        algorithms: Sequence[str] = _ALGORITHMS,
-                       group_size: int | None = None) -> list:
-    """``(algorithm, num_blocks)`` candidates around the analytic optimum."""
+                       group_size=None,
+                       compress_inter_group: bool = False) -> list:
+    """``(algorithm, num_blocks)`` candidates around the analytic optimum.
+
+    ``group_size`` is the hierarchy spec 'hier' candidates tune with (int or
+    level tuple). With ``compress_inter_group=True`` every 'hier' candidate
+    is doubled with a ``'hier+bf16'`` twin — the bf16 slow-stage wire at its
+    own (smaller-bytes) block optimum — so a consenting config's autotune
+    pass times the lossy variant head-to-head against the exact ones.
+    """
     out = []
     seen = set()
 
@@ -194,38 +221,51 @@ def candidate_settings(p: int, nbytes: int, model: cm.CommModel,
                                group_size=group_size)
         for mult in _BLOCK_SWEEP:
             add(algo, round(b0 * mult))
+        if algo == "hier" and compress_inter_group:
+            bc = cm.optimal_blocks(p, float(max(nbytes, 1)), model, "hier",
+                                   group_size=group_size, compression="bf16")
+            for mult in _BLOCK_SWEEP:
+                add(algo + COMPRESSED_SUFFIX, round(bc * mult))
     return out
 
 
 def tune(runner: Callable[[str, int], float], p: int, nbytes: int,
          dtype: str, topology: str, model: cm.CommModel,
          algorithms: Sequence[str] = _ALGORITHMS,
-         group_size: int | None = None,
+         group_size=None,
+         compress_inter_group: bool = False,
          cache: AutotuneCache | None = None,
          save: bool = True) -> TuneResult:
     """Measure candidates with ``runner(algorithm, num_blocks) -> seconds``.
 
-    The best measured setting is recorded in the cache (and persisted when
+    ``algorithm`` as handed to ``runner`` may carry the ``'+bf16'`` suffix
+    (compressed-hier candidates, opted in via ``compress_inter_group``); the
+    recorded :class:`TuneResult` normalizes it into ``compressed=True``. The
+    best measured setting is recorded in the cache (and persisted when
     ``save``). ``runner`` failures (e.g. an algorithm unavailable on this
     backend) are skipped, not fatal — unless every candidate fails.
     """
     cache = cache or get_cache()
-    # Resolve the group shape hier actually runs with BEFORE measuring, so
-    # the recorded TuneResult names the exact configuration that was timed.
-    from repro.core.topology import default_group_size
-    hier_gs = int(group_size) if group_size else default_group_size(p)
+    # Resolve the shape hier actually runs with BEFORE measuring, so the
+    # recorded TuneResult names the exact configuration that was timed.
+    from repro.core.topology import as_levels, default_group_size
+    hier_lv = as_levels(group_size)
+    if hier_lv is None:
+        hier_lv = as_levels(default_group_size(p))
     best: TuneResult | None = None
     errors = []
     for algo, b in candidate_settings(p, nbytes, model, algorithms,
-                                      group_size):
+                                      group_size, compress_inter_group):
         try:
             t = float(runner(algo, b))
         except Exception as e:  # candidate unavailable — keep tuning
             errors.append((algo, b, e))
             continue
         if best is None or t < best.time_s:
-            best = TuneResult(algo, b, t,
-                              hier_gs if algo == "hier" else None)
+            base = algo.removesuffix(COMPRESSED_SUFFIX)
+            best = TuneResult(base, b, t,
+                              hier_lv if base == "hier" else None,
+                              compressed=algo.endswith(COMPRESSED_SUFFIX))
     if best is None:
         raise RuntimeError(f"autotune: every candidate failed: {errors}")
     cache.put(p, nbytes, dtype, topology, best)

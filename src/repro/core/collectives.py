@@ -33,6 +33,7 @@ __all__ = [
     "bucketed_all_reduce",
     "structured_all_reduce",
     "all_reduce_mean",
+    "bucket_sizes",
 ]
 
 METHODS = ("auto", "dptree", "sptree", "redbcast", "ring", "hier", "psum")
@@ -48,16 +49,33 @@ class CollectiveConfig:
     ``num_blocks``   pipeline block count; None = Pipelining-Lemma optimum
                      refined by local descent (and by the autotuner's measured
                      pick under ``auto``).
-    ``compression``  None | 'bf16' — cast payload before the wire, cast back.
+    ``compression``  None | 'bf16' — cast the WHOLE payload before any wire,
+                     cast back at the end (every stage rides bf16). For the
+                     hierarchical slow-stage-only variant with f32
+                     accumulation, use ``compress_inter_group`` instead.
     ``bucket_bytes`` split grad pytrees into buckets of at most this many
                      bytes; XLA's scheduler can overlap bucket k's collective
                      with bucket k+1's producers.
     ``comm_model``   alpha-beta constants for the INTER-group (slowest) fabric,
                      used by the auto switch/tuner.
-    ``group_size``   ranks per fast-link group for the hierarchical method
-                     (None = 4, then 2, then flat). Also gates whether 'hier'
+    ``group_size``   hierarchy spec for the hierarchical method: ranks per
+                     fast-link group (int), or a tuple of per-level ring
+                     sizes innermost-first for 3+-level shapes (e.g.
+                     ``(4, 2)`` = chip ring, node ring, dual tree over pods);
+                     None = 4, then 2, then flat. Also gates whether 'hier'
                      competes in the ``auto`` switch.
-    ``intra_model``  alpha-beta constants for the intra-group fast links.
+    ``levels``       alias for an N-level ``group_size`` spec; when set it
+                     takes precedence (kept separate so call sites that
+                     pass a plain int group size keep reading naturally).
+    ``intra_model``  alpha-beta constants for the intra-group fast links
+                     (every intra level; the cost model also accepts
+                     per-level models, see ``cost_model.hier_time``).
+    ``compress_inter_group``
+                     hierarchical method only: bf16-compress the slow
+                     inter-group stage's wire (intra stages and the final
+                     result stay full precision; tree combines accumulate in
+                     f32). Lossy — the autotuner times it as extra candidates
+                     only when this flag opts in.
     """
 
     method: str = "dptree"
@@ -65,14 +83,28 @@ class CollectiveConfig:
     compression: str | None = None
     bucket_bytes: int = 1 << 30
     comm_model: cm.CommModel = cm.TPU_V5E
-    group_size: int | None = None
+    group_size: int | tuple | None = None
     intra_model: cm.CommModel = cm.TPU_V5E
+    levels: tuple | None = None
+    compress_inter_group: bool = False
 
     def __post_init__(self):
         if self.method not in METHODS:
             raise ValueError(f"unknown method {self.method!r}; want {METHODS}")
         if self.compression not in (None, "bf16"):
             raise ValueError(f"unknown compression {self.compression!r}")
+        if self.levels is not None:
+            object.__setattr__(self, "levels", tuple(int(s)
+                                                     for s in self.levels))
+        if isinstance(self.group_size, (list, tuple)):
+            object.__setattr__(self, "group_size",
+                               tuple(int(s) for s in self.group_size))
+
+    @property
+    def hier_spec(self):
+        """The hierarchy spec hier/auto paths consume: ``levels`` if set,
+        else ``group_size`` (int, tuple, or None)."""
+        return self.levels if self.levels is not None else self.group_size
 
 
 _RUNNABLE = ("dptree", "sptree", "redbcast", "ring", "hier", "psum")
@@ -107,9 +139,14 @@ def _degrade_for_op(algo: str, op, method: str) -> str:
 
 def _pick(method: str, p: int, nbytes: int, config: "CollectiveConfig",
           dtype) -> tuple:
-    """(algorithm, measured_num_blocks | None, hier_group_size | None)."""
+    """(algorithm, measured_num_blocks | None, hier_spec | None, compress).
+
+    ``hier_spec`` is the hierarchy level spec (int or tuple) the hier path
+    should execute with; ``compress`` is whether the slow inter-group stage
+    rides the bf16 wire.
+    """
     if method != "auto":
-        return method, None, config.group_size
+        return method, None, config.hier_spec, config.compress_inter_group
     # Empirical closed loop first: a measured (algorithm, blocks) for this
     # exact (p, bytes, dtype, fabric) beats any model prediction — but only
     # if the recorded setting is actually runnable here ('auto' must degrade,
@@ -118,27 +155,37 @@ def _pick(method: str, p: int, nbytes: int, config: "CollectiveConfig",
                           config.comm_model.name)
     if hit is not None and hit.algorithm in _RUNNABLE:
         if hit.algorithm != "hier":
-            return hit.algorithm, max(1, int(hit.num_blocks)), None
-        # Replay ONLY the group shape the entry was measured with; an entry
-        # without one (old schema) is stale — fall through to the model.
-        from repro.core.topology import resolve_group_size
-        gs = resolve_group_size(p, hit.group_size) if hit.group_size else None
-        if gs is not None:
-            return "hier", max(1, int(hit.num_blocks)), gs
+            return hit.algorithm, max(1, int(hit.num_blocks)), None, False
+        # Replay ONLY the configuration the entry was measured with: the
+        # exact group shape, and compression only if (a) it was timed
+        # compressed and (b) this config opts into the lossy wire. An entry
+        # without a shape (old schema), with an infeasible shape, or timed
+        # compressed without local opt-in is stale here — fall through to
+        # the model rather than execute an un-measured or un-consented
+        # configuration.
+        from repro.core.topology import resolve_levels
+        lv = (resolve_levels(p, hit.group_size)
+              if hit.group_size is not None else None)
+        if lv is not None and (not hit.compressed
+                               or config.compress_inter_group):
+            return "hier", max(1, int(hit.num_blocks)), lv, hit.compressed
     # psum is XLA's own allreduce; we only auto-pick among algorithms whose
     # cost we model. The paper's point stands: never let the library guess.
     algo = cm.best_algorithm(p, float(max(nbytes, 1)), config.comm_model,
-                             group_size=config.group_size,
+                             group_size=config.hier_spec,
                              intra_model=config.intra_model)
-    return algo, None, config.group_size
+    return (algo, None, config.hier_spec,
+            algo == "hier" and config.compress_inter_group)
 
 
-def _nblocks(num_blocks, p, nbytes, model, algorithm, group_size=None):
+def _nblocks(num_blocks, p, nbytes, model, algorithm, group_size=None,
+             compression=None):
     if num_blocks is not None:
         return int(num_blocks)
     if algorithm in ("dptree", "sptree", "redbcast", "hier"):
         return cm.optimal_blocks(p, float(max(nbytes, 1)), model, algorithm,
-                                 group_size=group_size)
+                                 group_size=group_size,
+                                 compression=compression)
     return 1
 
 
@@ -156,14 +203,23 @@ def all_reduce(x: jax.Array, axis_name: str, p: int,
                config: CollectiveConfig = CollectiveConfig(),
                op: Callable = jnp.add,
                shard_spec=None) -> jax.Array:
-    """Allreduce an array over ``axis_name``.
+    """Allreduce an array over ``axis_name``: the reduction over all ``p``
+    devices of the axis lands on every device.
 
-    1-D payloads pipeline directly; 2-D ``(rows, lanes)`` payloads pipeline
-    over rows with the lane dim left to GSPMD (the gradient-bucket layout:
-    lanes shard over 'model' so no buffer is ever replicated). Higher-rank
-    payloads pipeline over dim 0 *without flattening* — flattening a tensor
-    with GSPMD-sharded trailing dims would all-gather it to full size — and
-    ``shard_spec`` (the leaf's own PartitionSpec) is pinned on the scan carry.
+    Must be called inside a ``shard_map`` manual over ``axis_name``. The
+    algorithm, pipeline block count, hierarchy shape, and compression all
+    come from ``config`` (see :class:`CollectiveConfig`); ``op`` must be
+    associative, and the ring-order methods (``ring``/``hier``) additionally
+    require commutativity — under ``auto`` unsupported picks silently
+    degrade to the rank-ordered dptree, explicit requests raise.
+
+    Payload layout: 1-D payloads pipeline directly; 2-D ``(rows, lanes)``
+    payloads pipeline over rows with the lane dim left to GSPMD (the
+    gradient-bucket layout: lanes shard over 'model' so no buffer is ever
+    replicated). Higher-rank payloads pipeline over dim 0 *without
+    flattening* — flattening a tensor with GSPMD-sharded trailing dims would
+    all-gather it to full size — and ``shard_spec`` (the leaf's own
+    PartitionSpec) is pinned on the scan carry.
     """
     if p == 1:
         return x
@@ -182,8 +238,8 @@ def all_reduce(x: jax.Array, axis_name: str, p: int,
     if config.compression == "bf16" and flat.dtype == jnp.float32:
         flat = flat.astype(jnp.bfloat16)
     nbytes = flat.size * flat.dtype.itemsize
-    algo, nb_measured, hier_gs = _pick(config.method, p, nbytes, config,
-                                       flat.dtype)
+    algo, nb_measured, hier_spec, hier_compress = _pick(
+        config.method, p, nbytes, config, flat.dtype)
     new_algo = _degrade_for_op(algo, op, config.method)
     if new_algo != algo:
         algo, nb_measured = new_algo, None
@@ -202,7 +258,8 @@ def all_reduce(x: jax.Array, axis_name: str, p: int,
             algo = "psum"
     nb = (nb_measured if config.num_blocks is None and nb_measured is not None
           else _nblocks(config.num_blocks, p, nbytes, config.comm_model,
-                        algo, config.group_size))
+                        algo, hier_spec,
+                        "bf16" if hier_compress else None))
     if algo == "psum":
         # route through the matching primitive: psum with op=max would
         # silently sum.
@@ -224,8 +281,9 @@ def all_reduce(x: jax.Array, axis_name: str, p: int,
     elif algo == "ring":
         out = ring_allreduce(flat, axis_name, p, op=op)
     elif algo == "hier":
-        out = hier_allreduce(flat, axis_name, p, group_size=hier_gs,
-                             num_blocks=nb, op=op, carry_spec=carry_spec)
+        out = hier_allreduce(flat, axis_name, p, group_size=hier_spec,
+                             num_blocks=nb, op=op, carry_spec=carry_spec,
+                             compress_inter_group=hier_compress)
     else:  # pragma: no cover
         raise AssertionError(algo)
     if out.ndim == 2:
@@ -264,19 +322,6 @@ def bucketed_all_reduce(tree: Any, axis_name: str, p: int,
     out = [None] * len(leaves)
     n_model = _mesh_axis_size("model")
 
-    def model_dim(k):
-        """Index of the leaf dim sharded exactly over 'model', or None."""
-        if specs[k] is None or n_model is None:
-            return None
-        entries = list(specs[k]) + [None] * (leaves[k].ndim - len(specs[k]))
-        for d, e in enumerate(entries):
-            names = e if isinstance(e, tuple) else ((e,) if e else ())
-            if names == ("model",) and leaves[k].shape[d] % n_model == 0:
-                return d
-            if names and names != ("model",):
-                return -1  # sharded some other way -> per-leaf path
-        return None
-
     # Partition leaves into: model-sharded (shard-major bucket), replicated
     # (plain flat bucket), and other-sharded (reduced per leaf, no bucketing).
     # Shard-major layout: moveaxis the 'model' dim first, split it into
@@ -285,7 +330,7 @@ def bucketed_all_reduce(tree: Any, axis_name: str, p: int,
     # sharded tensor directly would all-gather it: element order interleaves).
     by_kind = {"model": [], "repl": [], "other": []}
     for k in range(len(leaves)):
-        d = model_dim(k)
+        d = _model_dim(leaves[k], specs[k], n_model)
         if d is None:
             by_kind["repl"].append(k)
         elif d < 0:
@@ -299,17 +344,7 @@ def bucketed_all_reduce(tree: Any, axis_name: str, p: int,
         out[k] = maybe_shard(red, specs[k]) if specs[k] is not None else red
 
     def buckets(items, size_of):
-        items = sorted(items, key=lambda it: str(size_of(it)[1]))
-        i = 0
-        while i < len(items):
-            dt = size_of(items[i])[1]
-            group, sz = [], 0
-            while i < len(items) and size_of(items[i])[1] == dt \
-                    and (not group or sz < config.bucket_bytes):
-                group.append(items[i])
-                sz += size_of(items[i])[0] * dt.itemsize
-                i += 1
-            yield group
+        return _bucket_groups(items, size_of, config.bucket_bytes)
 
     # --- model-sharded leaves: (n_model, L) pieces, concat on dim 1 --------
     for group in buckets(by_kind["model"],
@@ -348,6 +383,76 @@ def bucketed_all_reduce(tree: Any, axis_name: str, p: int,
             out[k] = red[off:off + n].reshape(leaves[k].shape)
             off += n
     return jax.tree.unflatten(treedef, out)
+
+
+def _bucket_groups(items, size_of, bucket_bytes):
+    """Greedy dtype-homogeneous bucketing shared by :func:`bucketed_all_reduce`
+    and :func:`bucket_sizes`. ``size_of(item) -> (nelems, dtype)``."""
+    items = sorted(items, key=lambda it: str(size_of(it)[1]))
+    i = 0
+    while i < len(items):
+        dt = size_of(items[i])[1]
+        group, sz = [], 0
+        while i < len(items) and size_of(items[i])[1] == dt \
+                and (not group or sz < bucket_bytes):
+            group.append(items[i])
+            sz += size_of(items[i])[0] * dt.itemsize
+            i += 1
+        yield group
+
+
+def _model_dim(leaf, spec, n_model):
+    """Index of the leaf dim sharded exactly over 'model' (shard-major bucket
+    member), None for replicated leaves, -1 for any other sharding (per-leaf
+    reduction). THE single classifier — :func:`bucketed_all_reduce` and
+    :func:`bucket_sizes` must agree on it or warm-up-measured sizes would
+    miss the trace-time cache keys."""
+    if spec is None or n_model is None:
+        return None
+    entries = list(spec) + [None] * (leaf.ndim - len(spec))
+    for d, e in enumerate(entries[:leaf.ndim]):
+        names = e if isinstance(e, tuple) else ((e,) if e else ())
+        if names == ("model",) and leaf.shape[d] % n_model == 0:
+            return d
+        if names and names != ("model",):
+            return -1  # sharded some other way -> per-leaf path
+    return None
+
+
+def bucket_sizes(tree: Any, bucket_bytes: int = 1 << 30,
+                 leaf_specs: Any = None, n_model: int | None = None) -> list:
+    """The ``(nelems, dtype)`` of each reduction :func:`bucketed_all_reduce`
+    would issue for this pytree — the vector lengths a per-mesh autotune
+    warm-up should measure. Accepts concrete arrays or ``jax.eval_shape``
+    structs.
+
+    Mirrors the reduce path exactly: leaves are first partitioned by
+    sharding kind (``leaf_specs`` + ``n_model``, the 'model' axis size —
+    the same inputs ``bucketed_all_reduce`` classifies with), then
+    model-sharded and replicated kinds are greedily bucketed per dtype
+    while other-sharded leaves are reduced per leaf. Without
+    ``leaf_specs``/``n_model`` every leaf counts as replicated — correct
+    for meshes with no (or trivial) 'model' axis.
+    """
+    leaves = jax.tree.leaves(tree)
+    specs = (jax.tree.leaves(leaf_specs,
+                             is_leaf=lambda v: isinstance(v, jax.sharding.PartitionSpec))
+             if leaf_specs is not None else [None] * len(leaves))
+    by_kind = {"model": [], "repl": [], "other": []}
+    for k in range(len(leaves)):
+        d = _model_dim(leaves[k], specs[k], n_model)
+        kind = "repl" if d is None else ("other" if d < 0 else "model")
+        by_kind[kind].append(k)
+    out = [(int(leaves[k].size), jnp.dtype(leaves[k].dtype))
+           for k in by_kind["other"]]
+    for kind in ("model", "repl"):
+        for group in _bucket_groups(
+                by_kind[kind],
+                lambda k: (leaves[k].size, jnp.dtype(leaves[k].dtype)),
+                bucket_bytes):
+            n = sum(leaves[k].size for k in group)
+            out.append((int(n), jnp.dtype(leaves[group[0]].dtype)))
+    return out
 
 
 def _mesh_axis_size(name: str) -> int | None:

@@ -34,6 +34,7 @@ __all__ = [
     "redbcast_time",
     "ring_time",
     "hier_time",
+    "COMPRESS_FACTOR",
     "optimal_blocks",
     "best_algorithm",
 ]
@@ -124,59 +125,101 @@ def ring_time(p: int, m_bytes: float, model: CommModel,
     return steps * (model.exchange(chunk) + model.gamma * chunk)
 
 
+# Wire-bytes multiplier of the slow inter-group stage per compression mode.
+COMPRESS_FACTOR = {None: 1.0, "bf16": 0.5}
+
+
 def hier_time(p: int, m_bytes: float, b: int, model: CommModel,
-              group_size: int = 4,
-              intra_model: CommModel | None = None) -> float:
-    """Two-level hierarchical allreduce on a heterogeneous fabric.
+              group_size=4,
+              intra_model: CommModel | None = None, *,
+              level_models=None,
+              compression: str | None = None) -> float:
+    """Hierarchical (2..N-level) allreduce on a heterogeneous fabric.
 
     ``model`` prices the slow inter-group links (e.g. ``TPU_V5E_INTERPOD``
-    DCN); ``intra_model`` (default ``TPU_V5E`` ICI) prices the fast
-    intra-group ring. Stage costs:
+    DCN). ``group_size`` is a hierarchy spec (int, or a tuple of per-level
+    ring sizes innermost-first — see :func:`repro.core.topology.as_levels`).
+    Each intra level is priced with its own ``(alpha, beta, gamma)``:
+    ``level_models[j]`` if given (innermost first), else ``intra_model``
+    (default ``TPU_V5E`` ICI) for every level. Stage costs:
 
-    * intra reduce-scatter + all-gather: ``2*(s-1)`` steps of a bidirectional
-      ring exchanging ``m/(2s)`` bytes each — the ``2*beta*m*(s-1)/s`` terms
-      on the FAST links,
-    * inter dptree over the ``m/s``-byte shard stripes on the SLOW links —
-      the wire term the hierarchy divides by the group factor.
+    * level-``j`` reduce-scatter + all-gather: ``2*(s_j - 1)`` steps of a
+      bidirectional ring exchanging ``m_j / (2 s_j)`` bytes each, where
+      ``m_j = m / prod(levels[:j])`` is the vector that reaches level ``j`` —
+      the ``2*beta_j*m_j*(s_j-1)/s_j`` terms on the FAST links,
+    * inter-group dptree over the ``m / prod(levels)``-byte shard stripes on
+      the SLOW links — the wire term the hierarchy divides by the full group
+      factor. ``compression='bf16'`` multiplies the slow-stage bytes by
+      :data:`COMPRESS_FACTOR` (0.5: bf16 wire over f32 payloads); the fast
+      levels always move full-precision bytes.
+
+    Degenerate specs keep their closed forms: an infeasible spec prices as
+    the flat dptree, a single all-covering group as the pure intra ring.
     """
     if p == 1:
         return 0.0
-    s = int(group_size)
-    if s <= 1 or p % s:
+    from repro.core.topology import as_levels
+    try:
+        levels = as_levels(group_size)
+    except (TypeError, ValueError):
+        levels = None
+    S = int(np.prod(levels)) if levels else 1
+    if not levels or S <= 1 or p % S:
         return dptree_time(p, m_bytes, b, model)
-    intra_model = intra_model or TPU_V5E
-    g = p // s
+    if level_models is None:
+        level_models = (intra_model or TPU_V5E,) * len(levels)
+    if len(level_models) != len(levels):
+        raise ValueError(f"need one CommModel per level: "
+                         f"{len(level_models)} models for {levels}")
+    g = p // S
+    t, cur = 0.0, m_bytes
+    for s, lm in zip(levels, level_models):
+        half = cur / s / 2.0
+        t += 2 * (s - 1) * (lm.exchange(half) + lm.gamma * half)
+        cur /= s
     if g == 1:
-        return ring_time(s, m_bytes, intra_model)
-    shard = m_bytes / s
-    half = shard / 2.0
-    intra = 2 * (s - 1) * (intra_model.exchange(half)
-                           + intra_model.gamma * half)
-    return intra + dptree_time(g, shard, b, model)
+        return t
+    return t + dptree_time(g, cur * COMPRESS_FACTOR[compression], b, model)
 
 
 @functools.lru_cache(maxsize=4096)
 def optimal_blocks(p: int, m_bytes: float, model: CommModel,
                    algorithm: str = "dptree",
-                   group_size: int | None = None) -> int:
+                   group_size=None,
+                   compression: str | None = None) -> int:
     """Pipelining-Lemma block count: balance the +3b alpha term vs beta*m/b.
 
     For ``T(b) = (L + c*b)(alpha + beta*m/b)``, the optimum is
-    ``b* = sqrt(L * beta * m / (c * alpha))``. Clamped to [1, m_bytes/64] so a
-    block never goes below 64 bytes (one cache line / lane group).
+    ``b* = sqrt(L * beta * m / (c * alpha))``, refined by the local descent of
+    :func:`_refine_blocks` (integer macro-round effects). Clamped to
+    [1, m_bytes/64] so a block never goes below 64 bytes (one cache line /
+    lane group). ``model`` prices the fabric the pipelined stage runs on —
+    for ``algorithm='hier'`` that is the slow inter-group fabric; the block
+    count is re-derived for the shard-stripe dptree the hierarchy actually
+    pipelines (``p // prod(levels)`` ranks, ``m / prod(levels)`` bytes,
+    halved again under ``compression='bf16'``), NOT reused from the flat
+    optimum — per-level traffic, per-level block count.
     """
     if p == 1 or m_bytes <= 0:
         return 1
     if algorithm == "hier":
-        # blocks pipeline the inter-group stage: a dptree over num_groups
-        # ranks moving the m/s-byte shard stripes. group_size=None resolves
-        # the same way hier_allreduce resolves it (4, then 2, then flat) so
-        # the block count matches the shape that actually executes.
-        from repro.core.topology import default_group_size
-        s = int(group_size) if group_size else default_group_size(p)
-        if s <= 1 or p % s or p // s == 1:
+        # blocks pipeline the slowest stage: a dptree over num_groups ranks
+        # moving the m/prod(levels)-byte (possibly compressed) shard stripes.
+        # group_size=None resolves the same way hier_allreduce resolves it
+        # (4, then 2, then flat) so the block count matches the shape that
+        # actually executes.
+        from repro.core.topology import as_levels, default_group_size
+        try:
+            levels = as_levels(group_size)
+        except (TypeError, ValueError):
+            levels = None
+        if levels is None:
+            levels = as_levels(default_group_size(p))
+        S = int(np.prod(levels)) if levels else 1
+        if S <= 1 or p % S or p // S == 1:
             return optimal_blocks(p, m_bytes, model, "dptree")
-        return optimal_blocks(p // s, m_bytes / s, model, "dptree")
+        return optimal_blocks(p // S, m_bytes / S * COMPRESS_FACTOR[compression],
+                              model, "dptree")
     if algorithm == "dptree":
         topo = build_dual_tree(p)
         c = float(max(1, len(topo.active_classes())))
@@ -236,15 +279,20 @@ _TIME_FNS.update({
 
 
 def best_algorithm(p: int, m_bytes: float, model: CommModel,
-                   group_size: int | None = None,
-                   intra_model: CommModel | None = None) -> str:
+                   group_size=None,
+                   intra_model: CommModel | None = None,
+                   level_models=None) -> str:
     """Size-adaptive switch (what OpenMPI got wrong in the paper's Table 2).
 
     Evaluates every implemented algorithm at its own best block size and picks
     the fastest. Small m -> tree (log-latency); huge m -> ring (bandwidth).
-    With a valid ``group_size`` the two-level hierarchical composition also
-    competes (it wins on heterogeneous fabrics where ``model`` prices slow
-    inter-group links and ``intra_model`` fast intra-group ones).
+    With a feasible ``group_size`` hierarchy spec (int or level tuple, see
+    :func:`repro.core.topology.resolve_levels`) the hierarchical composition
+    also competes — it wins on heterogeneous fabrics where ``model`` prices
+    slow inter-group links and ``intra_model``/``level_models`` fast intra
+    ones. Compression never competes here: it changes the numerics, so only
+    an explicit ``CollectiveConfig(compress_inter_group=True)`` (via the
+    autotuner's extra candidates) opts into it.
     """
     cands = {
         "dptree": dptree_time(p, m_bytes, optimal_blocks(p, m_bytes, model, "dptree"), model),
@@ -252,12 +300,13 @@ def best_algorithm(p: int, m_bytes: float, model: CommModel,
         "redbcast": redbcast_time(p, m_bytes, optimal_blocks(p, m_bytes, model, "redbcast"), model),
         "ring": ring_time(p, m_bytes, model),
     }
-    from repro.core.topology import resolve_group_size
-    s = resolve_group_size(p, group_size) if group_size else None
-    if s is not None:
-        b = optimal_blocks(p, m_bytes, model, "hier", group_size=s)
-        cands["hier"] = hier_time(p, m_bytes, b, model, group_size=s,
-                                  intra_model=intra_model)
+    from repro.core.topology import resolve_levels
+    lv = resolve_levels(p, group_size) if group_size else None
+    if lv is not None:
+        b = optimal_blocks(p, m_bytes, model, "hier", group_size=lv)
+        cands["hier"] = hier_time(p, m_bytes, b, model, group_size=lv,
+                                  intra_model=intra_model,
+                                  level_models=level_models)
     return min(cands, key=cands.get)
 
 

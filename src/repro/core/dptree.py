@@ -13,18 +13,22 @@ result blocks toward the leaves, i.e. the "telephone-like" bidirectional
 exchange realized on full-duplex ICI links.
 
 The shared tree engine is *fused*: the three edge-class steps of a macro-round
-share one slice/update plumbing scheme —
+share one slice/update plumbing scheme, leaving THREE dynamic slices per step
+(``up_out``, ``down_out``, ``cur_b``) where the seed engine traced five —
 
 * one ``take(jC)`` feeds both the C-role up-send and the root's dual-combine
   (the seed engine materialized that dynamic slice twice per step);
-* masked writes land in a scratch block row instead of read-modify-writing the
-  current value, removing two more dynamic slices per step;
+* masked writes land in a scratch block row instead of read-modify-writing
+  the current value, removing the read of the overwritten block (the seed's
+  fifth slice) — idle steps write garbage to row ``b``, which is dropped;
 * for commutative operators the child0 partial received at a node's A-step is
   *deferred* in a carried register and folded into the B-step's combine, so
   the two child combines plus the local block become ONE three-operand
   elementwise pass (``kernels.block_combine.combine3`` on TPU — a single HBM
   round-trip — with a fused-jnp fallback on interpret/CPU), and the root's
   dual-combine likewise rides that same pass instead of a second one.
+
+(The slice budget is pinned by ``test_fused_engine_hlo_slice_count``.)
 
 Non-commutative (merely associative) operators keep the exact seed ordering
 (Algorithm 1's ``t (.) Y`` / lower-root ``Y (.) t`` rules) on a general path.
@@ -35,8 +39,9 @@ Implemented algorithms:
 * :func:`sptree_allreduce`  — single-tree doubly-pipelined variant (§1.2)
 * :func:`redbcast_allreduce`— pipelined reduce + pipelined bcast (User-Allreduce1)
 * :func:`ring_allreduce`    — bidirectional ring reduce-scatter + all-gather
-* :func:`hier_allreduce`    — two-level: intra-group ring reduce-scatter,
-  inter-group dptree over shard stripes, intra-group all-gather
+* :func:`hier_allreduce`    — hierarchical (2..N levels): per-level ring
+  reduce-scatter down, dptree over shard stripes at the slowest level
+  (optionally on a bf16 wire with f32 accumulation), per-level all-gather up
 """
 
 from __future__ import annotations
@@ -383,77 +388,128 @@ def sptree_allreduce(x: jax.Array, axis_name: str, p: int, *,
 
 
 # --------------------------------------------------------------------------
-# Hierarchical (two-level) allreduce: intra-group bidirectional-ring
-# reduce-scatter -> inter-group dptree over the scattered shard stripes ->
-# intra-group all-gather. With group size s, the slow inter-group fabric
-# carries ~3*beta*m/s instead of 3*beta*m; the fast intra-group links absorb
-# the 2*beta*m*(s-1)/s scatter/gather terms.
+# Hierarchical (N-level) allreduce: per-level bidirectional-ring
+# reduce-scatter down the fast levels -> dptree over the scattered shard
+# stripes at the slowest level -> per-level all-gather back up. With
+# S = prod(levels) ranks per top-level group, the slow inter-group fabric
+# carries ~3*beta*m/S instead of 3*beta*m; each fast level j absorbs its
+# 2*beta*(m/prod(levels[:j]))*(s_j-1)/s_j scatter/gather terms.
 # --------------------------------------------------------------------------
 
+def _compress_wire(x: jax.Array) -> jax.Array:
+    """f32 -> bf16 for the slow-stage wire. Pallas tiled cast on real TPUs
+    (1-D payloads), jnp cast elsewhere (interpret/CPU, lane-sharded 2-D
+    payloads — where GSPMD owns the layout)."""
+    if jax.default_backend() == "tpu" and x.ndim == 1:
+        from repro.kernels import quantize
+        return quantize.compress_bf16(x, interpret=False)
+    return x.astype(jnp.bfloat16)
+
+
+def _decompress_wire(x: jax.Array, dtype) -> jax.Array:
+    if jax.default_backend() == "tpu" and x.ndim == 1:
+        from repro.kernels import quantize
+        return quantize.decompress_bf16(x, dtype, interpret=False)
+    return x.astype(dtype)
+
+
+def _bf16_wire_op(op: Op) -> Op:
+    """Combine for bf16 wire payloads: decompress both operands to f32,
+    reduce in full precision, recompress the result for the next hop."""
+    def wire_op(a, b):
+        return op(a.astype(jnp.float32),
+                  b.astype(jnp.float32)).astype(jnp.bfloat16)
+    return wire_op
+
+
 def hier_allreduce(x: jax.Array, axis_name: str, p: int, *,
-                   group_size: int | None = None,
+                   group_size=None,
                    num_blocks: int = 16,
                    op: Op = jnp.add,
                    htopo: HierarchicalTopology | None = None,
                    carry_spec=None,
-                   bidirectional: bool = True) -> jax.Array:
-    """Two-level hierarchical allreduce (node-aware composition).
+                   bidirectional: bool = True,
+                   compress_inter_group: bool = False) -> jax.Array:
+    """Hierarchical allreduce (fabric-aware composition, 2..N levels).
 
     ``op`` must be commutative and associative (the ring stages reduce in
-    ring order, not rank order) — sums, max/min, products. Groups are
-    contiguous rank blocks of ``group_size`` (``None`` picks 4, then 2, then
-    flat); stripe ``j`` — the ranks with local index ``j`` in each group —
-    runs its own inter-group dual-root tree, all stripes concurrently through
-    the same three ppermute classes.
+    ring order, not rank order) — sums, max/min, products. ``group_size`` is
+    a hierarchy spec (see :func:`repro.core.topology.as_levels`): an int for
+    the classic two-level split, a tuple of per-level ring sizes
+    innermost-first for deeper shapes (e.g. ``(4, 2)`` = chip ring inside a
+    node, node ring inside a pod, dual tree over pods), or ``None`` (4, then
+    2, then flat). Stripe ``j`` — the ranks with local index ``j`` in each
+    top-level group — runs its own inter-group dual-root tree, all stripes
+    concurrently through the same three ppermute classes.
+
+    ``compress_inter_group=True`` casts the (f32) shard stripes to bf16
+    before the slow inter-group stage only; every tree combine decompresses
+    to f32, reduces, and recompresses, and the result is decompressed before
+    the full-precision all-gather back up. Non-f32 payloads pass through
+    uncompressed.
     """
     if p == 1:
         return x
     h = htopo or build_hierarchy(p, group_size)
     assert h.p == p, (h.p, p)
-    s, g = h.group_size, h.num_groups
-    if s == 1:  # one rank per group: plain flat dptree over all ranks
+    if not h.levels:  # one rank per group: plain flat dptree over all ranks
         nb = max(1, min(int(num_blocks), x.shape[0]))
         return _tree_allreduce(x, axis_name, h.inter_topo, nb, op, None,
                                carry_spec)
-    if g == 1:  # one group spanning the axis: pure intra-group ring
-        return ring_allreduce(x, axis_name, p, op=op,
-                              bidirectional=bidirectional)
-
-    halves, chunk, m, trail = _ring_layout(x, s, bidirectional)
     i = compat.axis_index(axis_name)
-    li = jnp.mod(i, s)
-    perms = [h.ring_fwd, h.ring_bwd][: len(halves)]
-    signs = [1, -1][: len(halves)]
 
-    # ---- stage 1: intra-group bidirectional ring reduce-scatter ----------
-    reduced, shards = [], []
-    for H, perm, sg in zip(halves, perms, signs):
-        H = _ring_reduce_scatter(H, axis_name, li, s, perm, sg, op,
-                                 carry_spec)
-        own = jnp.mod(li + sg, s)  # chunk this rank now fully owns
-        reduced.append(H)
-        shards.append(jax.lax.dynamic_slice_in_dim(H, own, 1, axis=0)[0])
+    # ---- stage down: per-level bidirectional ring reduce-scatter ---------
+    # After level j each rank owns a fully-reduced (within its level-(<=j)
+    # neighborhood) stripe of 1/s_j of the previous vector; the stripe a rank
+    # ends up with depends only on its local coordinates, so ranks with equal
+    # local index across groups — the inter-tree stripes — hold aligned data.
+    vec, down = x, []
+    for s, stride, (fwd, bwd) in zip(h.levels, h.strides, h.level_rings):
+        li = jnp.mod(jnp.floor_divide(i, stride), s)
+        halves, chunk, m, trail = _ring_layout(vec, s, bidirectional)
+        perms = [fwd, bwd][: len(halves)]
+        signs = [1, -1][: len(halves)]
+        reduced, shards = [], []
+        for H, perm, sg in zip(halves, perms, signs):
+            H = _ring_reduce_scatter(H, axis_name, li, s, perm, sg, op,
+                                     carry_spec)
+            own = jnp.mod(li + sg, s)  # chunk this rank now fully owns
+            reduced.append(H)
+            shards.append(jax.lax.dynamic_slice_in_dim(H, own, 1, axis=0)[0])
+        down.append((reduced, perms, signs, li, s, chunk, m, trail,
+                     tuple(hh.shape[1] for hh in halves)))
+        vec = (jnp.concatenate(shards, axis=0) if len(shards) > 1
+               else shards[0])
 
-    # ---- stage 2: inter-group dptree allreduce over the shard stripes ----
-    shard_vec = (jnp.concatenate(shards, axis=0) if len(shards) > 1
-                 else shards[0])
-    nb = max(1, min(int(num_blocks), shard_vec.shape[0]))
-    shard_red = _tree_allreduce(shard_vec, axis_name, h.inter_topo, nb,
-                                op, None, carry_spec)
+    # ---- slowest stage: dptree allreduce over the shard stripes ----------
+    if h.num_groups > 1:
+        nb = max(1, min(int(num_blocks), vec.shape[0]))
+        if compress_inter_group and vec.dtype == jnp.float32:
+            wire_op = _bf16_wire_op(op)
+            wire = _tree_allreduce(_compress_wire(vec), axis_name,
+                                   h.inter_topo, nb, wire_op, wire_op,
+                                   carry_spec)
+            vec = _decompress_wire(wire, jnp.float32)
+        else:
+            vec = _tree_allreduce(vec, axis_name, h.inter_topo, nb, op, None,
+                                  carry_spec)
 
-    # ---- stage 3: intra-group ring all-gather ----------------------------
-    pieces, off = [], 0
-    for hh in halves:
-        pieces.append(shard_red[off:off + hh.shape[1]])
-        off += hh.shape[1]
-    outs = []
-    for H, perm, sg, piece in zip(reduced, perms, signs, pieces):
-        own = jnp.mod(li + sg, s)
-        H = jax.lax.dynamic_update_slice(
-            H, piece[None], (own,) + (0,) * (H.ndim - 1))
-        outs.append(_ring_all_gather(H, axis_name, li, s, perm, sg,
-                                     carry_spec))
-    return _ring_unlayout(outs, s, chunk, m, trail)
+    # ---- stage up: per-level ring all-gather, outermost level first ------
+    for reduced, perms, signs, li, s, chunk, m, trail, widths in \
+            reversed(down):
+        pieces, off = [], 0
+        for w in widths:
+            pieces.append(vec[off:off + w])
+            off += w
+        outs = []
+        for H, perm, sg, piece in zip(reduced, perms, signs, pieces):
+            own = jnp.mod(li + sg, s)
+            H = jax.lax.dynamic_update_slice(
+                H, piece[None], (own,) + (0,) * (H.ndim - 1))
+            outs.append(_ring_all_gather(H, axis_name, li, s, perm, sg,
+                                         carry_spec))
+        vec = _ring_unlayout(outs, s, chunk, m, trail)
+    return vec
 
 
 # --------------------------------------------------------------------------

@@ -39,6 +39,10 @@ __all__ = [
     "build_hierarchy",
     "expand_tree_over_stripes",
     "validate_topology",
+    "as_levels",
+    "resolve_levels",
+    "resolve_group_size",
+    "default_group_size",
 ]
 
 NO_NODE = -1
@@ -206,25 +210,49 @@ def build_single_tree(p: int) -> TreeTopology:
 
 @dataclasses.dataclass(frozen=True)
 class HierarchicalTopology:
-    """Two-level topology: ``p`` ranks in ``num_groups`` contiguous groups of
-    ``group_size`` (fast intra-group links, e.g. a 4-chip ICI node), with a
-    dual tree over the *groups* for the slow inter-group fabric.
+    """N-level topology: ``p`` ranks factored into nested contiguous groups.
 
-    ``inter_topo`` instantiates that group tree once per shard stripe
+    ``levels`` lists the ring sizes of the *intra*-group levels, innermost
+    (fastest links) first — e.g. ``(4,)`` is the classic two-level node/pod
+    split (4-chip ICI node, dual tree over nodes) and ``(4, 2)`` is a
+    three-level chip/node/pod shape (4-chip ICI ring inside a node, 2-node
+    ring inside a pod, dual tree over the ``p // 8`` pods). The slowest level
+    is always the dual tree over the ``num_groups = p // prod(levels)``
+    top-level groups; ``group_size`` is ``prod(levels)``, the ranks per
+    top-level group.
+
+    Ranks are laid out contiguously and level coordinates nest little-endian:
+    rank ``i`` sits in top-level group ``i // group_size`` and its level-``j``
+    ring coordinate is ``(i // strides[j]) % levels[j]`` with
+    ``strides[j] = prod(levels[:j])``.
+
+    ``inter_topo`` instantiates the group tree once per shard stripe
     ``j in [0, group_size)`` — stripe ``j`` is the rank set
     ``{q * group_size + j}`` — expanded into a single p-rank
     :class:`TreeTopology` whose three ppermute classes carry all stripes'
-    (disjoint) edges at once. ``ring_fwd``/``ring_bwd`` are the intra-group
-    ring permutations for the reduce-scatter / all-gather stages.
+    (disjoint) edges at once. ``level_rings[j]`` holds the
+    ``(forward, backward)`` ppermute pairs of the level-``j`` ring for the
+    reduce-scatter / all-gather stages (``ring_fwd``/``ring_bwd`` alias
+    level 0 for the two-level call sites).
     """
 
     p: int
-    group_size: int
-    num_groups: int
+    levels: tuple               # intra-level ring sizes, innermost first
+    strides: tuple              # rank stride of each level: prod(levels[:j])
+    group_size: int             # prod(levels): ranks per top-level group
+    num_groups: int             # p // group_size
     group_tree: TreeTopology    # dual tree over the num_groups groups
     inter_topo: TreeTopology    # group tree expanded over all stripes
-    ring_fwd: tuple             # intra-group ring, +1 direction
-    ring_bwd: tuple             # intra-group ring, -1 direction
+    level_rings: tuple          # per level: (fwd_pairs, bwd_pairs)
+
+    @property
+    def ring_fwd(self) -> tuple:
+        """Innermost-level ring, +1 direction (two-level compatibility)."""
+        return self.level_rings[0][0] if self.level_rings else ()
+
+    @property
+    def ring_bwd(self) -> tuple:
+        return self.level_rings[0][1] if self.level_rings else ()
 
 
 def expand_tree_over_stripes(gt: TreeTopology, s: int) -> TreeTopology:
@@ -279,30 +307,92 @@ def default_group_size(p: int) -> int:
     return 1
 
 
-def resolve_group_size(p: int, group_size: int | None = None) -> int | None:
-    """The group size a two-level hierarchy would execute with, or None if a
-    proper two-level shape is infeasible. THE single feasibility rule — the
-    auto switch, the cost model, and the benches must all consult this."""
-    s = int(group_size) if group_size else default_group_size(p)
-    return s if (s > 1 and p % s == 0 and p // s >= 2) else None
+def as_levels(spec) -> tuple | None:
+    """Normalize a hierarchy spec to a level tuple (or None for 'default').
+
+    Accepted forms, all meaning "ring sizes of the intra levels, innermost
+    first": ``None`` (caller resolves a default), an ``int`` (the classic
+    two-level group size), or a sequence of ints (N-level). Size-1 levels are
+    dropped — a one-rank ring is a no-op stage.
+    """
+    if spec is None:
+        return None
+    if isinstance(spec, (int, np.integer)):
+        spec = (int(spec),)
+    lv = tuple(int(s) for s in spec)
+    if any(s < 1 for s in lv):
+        raise ValueError(f"level sizes must be >= 1, got {lv}")
+    return tuple(s for s in lv if s > 1)
+
+
+def resolve_levels(p: int, spec=None) -> tuple | None:
+    """The level spec a hierarchical allreduce would execute with, or None if
+    no *proper* hierarchy is feasible at this ``p`` (every level must divide
+    out of ``p`` and leave >= 2 top-level groups for the slow-stage tree).
+    THE single feasibility rule — the auto switch, the cost model, and the
+    benches must all consult this."""
+    try:
+        lv = as_levels(spec)
+    except (TypeError, ValueError):
+        return None
+    if lv is None:
+        lv = as_levels(default_group_size(p))
+    S = int(np.prod(lv)) if lv else 1
+    return lv if (S > 1 and p % S == 0 and p // S >= 2) else None
+
+
+def resolve_group_size(p: int, group_size=None) -> int | None:
+    """Two-level compatibility wrapper over :func:`resolve_levels`: the ranks
+    per top-level group the hierarchy would execute with, or None."""
+    lv = resolve_levels(p, group_size)
+    return int(np.prod(lv)) if lv else None
+
+
+def _level_ring(p: int, size: int, stride: int) -> tuple:
+    """Forward ppermute pairs of the ring that advances one level coordinate:
+    rank ``i`` sends to the rank whose level coordinate ``(i//stride) % size``
+    is one higher (mod ``size``), all other coordinates equal."""
+    out = []
+    for i in range(p):
+        c = (i // stride) % size
+        out.append((i, i + (((c + 1) % size) - c) * stride))
+    return tuple(out)
+
+
+def build_hierarchy(p: int, group_size=None) -> HierarchicalTopology:
+    """Nested contiguous groups per ``group_size`` + a dual tree over the
+    top-level groups.
+
+    ``group_size`` is a hierarchy spec as accepted by :func:`as_levels`:
+    ``None`` (auto: 4, then 2, then flat), an int (two-level), or a tuple of
+    per-level ring sizes innermost-first (N-level, e.g. ``(4, 2)`` = 4-chip
+    node ring, 2-node pod ring, dual tree over pods). Memoized; treat the
+    result (and its numpy arrays) as read-only.
+    """
+    if p < 1:
+        raise ValueError(f"p must be >= 1, got {p}")
+    lv = as_levels(group_size)
+    if lv is None:
+        lv = as_levels(default_group_size(p))
+    return _build_hierarchy_cached(p, lv)
 
 
 @functools.lru_cache(maxsize=512)
-def build_hierarchy(p: int, group_size: int | None = None) -> HierarchicalTopology:
-    """Contiguous groups of ``group_size`` ranks + a dual tree over groups.
-    Memoized; treat the result as read-only."""
-    if p < 1:
-        raise ValueError(f"p must be >= 1, got {p}")
-    s = default_group_size(p) if group_size is None else int(group_size)
-    if s < 1 or p % s != 0:
-        raise ValueError(f"group_size {s} must divide p={p}")
-    g = p // s
+def _build_hierarchy_cached(p: int, levels: tuple) -> HierarchicalTopology:
+    S = int(np.prod(levels)) if levels else 1
+    if p % S != 0:
+        raise ValueError(f"level spec {levels} (prod {S}) must divide p={p}")
+    g = p // S
     gt = build_dual_tree(g)
-    inter = expand_tree_over_stripes(gt, s)
-    fwd = tuple((q * s + k, q * s + (k + 1) % s)
-                for q in range(g) for k in range(s)) if s > 1 else ()
-    bwd = tuple((dst, src) for (src, dst) in fwd)
-    return HierarchicalTopology(p, s, g, gt, inter, fwd, bwd)
+    inter = expand_tree_over_stripes(gt, S)
+    strides, rings, t = [], [], 1
+    for s in levels:
+        strides.append(t)
+        fwd = _level_ring(p, s, t)
+        rings.append((fwd, tuple((dst, src) for (src, dst) in fwd)))
+        t *= s
+    return HierarchicalTopology(p, levels, tuple(strides), S, g, gt, inter,
+                                tuple(rings))
 
 
 def validate_topology(topo: TreeTopology) -> None:

@@ -1,9 +1,17 @@
-"""Pallas TPU kernels: symmetric int8 (de)quantization with per-row scales.
+"""Pallas TPU kernels: lossy payload compression for caches and collectives.
 
-Used for (a) KV-cache compression in the serving path and (b) optional
-compressed payloads in the collective stack. Scales are per (ROWS x 128) tile
-row, computed in-kernel from the tile's absmax — one HBM pass for quantize,
-one for dequantize.
+Two families:
+
+* symmetric int8 (de)quantization with per-row scales — (a) KV-cache
+  compression in the serving path, (b) optional compressed payloads in the
+  collective stack. Scales are per (ROWS x 128) tile row, computed in-kernel
+  from the tile's absmax — one HBM pass for quantize, one for dequantize.
+* bf16 compress/decompress (:func:`compress_bf16` / :func:`decompress_bf16`)
+  — the wire format of the hierarchical allreduce's slow inter-group stage
+  (``CollectiveConfig(compress_inter_group=True)``). A plain round-to-nearest
+  cast streamed HBM->VMEM in (ROWS x 128) tiles: bf16 keeps f32's exponent
+  range, so no scale rows are needed, and the relative error per cast is at
+  most 2^-9 (see ``docs/algorithms.md`` for the end-to-end bound).
 """
 
 from __future__ import annotations
@@ -14,7 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["quantize_int8", "dequantize_int8"]
+__all__ = ["quantize_int8", "dequantize_int8", "compress_bf16",
+           "decompress_bf16"]
 
 LANES = 128
 DEFAULT_ROWS = 256
@@ -61,6 +70,52 @@ def quantize_int8(x: jax.Array, *, rows: int = DEFAULT_ROWS,
         interpret=interpret,
     )(x)
     return q[:r0], s[:r0]
+
+
+def _cast_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].astype(o_ref.dtype)
+
+
+def _cast_1d(x: jax.Array, dtype, rows: int, interpret: bool) -> jax.Array:
+    """Tiled elementwise cast of a 1-D vector: pad to (ROWS x 128) tiles,
+    stream one tile per grid step. One HBM read + one write, no gather."""
+    (m,) = x.shape
+    per_tile = rows * LANES
+    n_tiles = max(1, -(-m // per_tile))
+    padded = n_tiles * per_tile
+    if padded != m:
+        x = jnp.concatenate([x, jnp.zeros((padded - m,), x.dtype)])
+    mat = x.reshape(n_tiles * rows, LANES)
+    spec = pl.BlockSpec((rows, LANES), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _cast_kernel,
+        out_shape=jax.ShapeDtypeStruct(mat.shape, dtype),
+        grid=(n_tiles,),
+        in_specs=[spec],
+        out_specs=spec,
+        interpret=interpret,
+    )(mat)
+    return out.reshape(-1)[:m]
+
+
+def compress_bf16(x: jax.Array, *, rows: int = DEFAULT_ROWS,
+                  interpret: bool = False) -> jax.Array:
+    """f32 -> bf16 wire compression (round-to-nearest-even, 1-D payloads).
+
+    Used by the hierarchical allreduce before the slow inter-group stage;
+    numerically identical to ``x.astype(jnp.bfloat16)`` — the kernel only buys
+    the tiled single-pass HBM schedule on real TPUs.
+    """
+    assert x.ndim == 1
+    return _cast_1d(x, jnp.bfloat16, rows, interpret)
+
+
+def decompress_bf16(x: jax.Array, dtype=jnp.float32, *,
+                    rows: int = DEFAULT_ROWS,
+                    interpret: bool = False) -> jax.Array:
+    """bf16 -> f32 wire decompression; exact (bf16 embeds into f32)."""
+    assert x.ndim == 1
+    return _cast_1d(x, dtype, rows, interpret)
 
 
 def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32, *,

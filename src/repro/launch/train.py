@@ -38,6 +38,100 @@ from repro.optim.optimizers import adamw, cosine_schedule, wsd_schedule
 from repro.runtime.fault_tolerance import HostFailure, run_with_restarts
 
 
+def autotune_warmup(mesh, pcfg, params, leaf_specs=None, *, reps: int = 3,
+                    max_buckets: int = 4, verbose: bool = True) -> list:
+    """Per-mesh autotune warm-up: measure the collective candidates at the
+    ACTUAL gradient bucket sizes on this mesh's data-parallel axes, before
+    step 0, and record the winners in the on-disk autotune cache.
+
+    Bucket sizes come from :func:`repro.core.collectives.bucket_sizes` over
+    the real parameter pytree — pass ``leaf_specs`` (the params'
+    PartitionSpecs) so the sharding-kind partition matches what
+    ``bucketed_all_reduce`` issues at trace time; each (axis, bucket) pair
+    is timed on a dedicated one-axis mesh built from the devices that
+    actually sit along that axis (other axes pinned at coordinate 0 — the
+    links the training reduction crosses). Winners are keyed by
+    ``(p, nbytes, dtype, comm_model.name)``, exactly the key
+    ``CollectiveConfig(method="auto")`` probes at trace time, so the very
+    first training step resolves from measurements — the ROADMAP's closed
+    loop. Candidate failures are skipped by the tuner; this hook never
+    raises on an unmeasurable candidate.
+
+    Key-collision caveat: the cache key does not carry the axis, so when two
+    DP axes have the SAME size they share keys. Axes are therefore tuned
+    innermost-first ('data', then 'pod'), letting the slowest fabric's
+    winner overwrite on collision — a slow-link winner replays safely (if
+    suboptimally) on fast links, while the reverse can collapse. Distinct
+    per-axis results need distinct ``comm_model`` names (one config per
+    fabric), which is also what prices the auto switch correctly.
+
+    Returns ``[(axis, nbytes, TuneResult), ...]`` for logging.
+    """
+    import time
+
+    from jax.sharding import PartitionSpec as _P
+
+    from repro import compat
+    from repro.core import autotune, collectives
+    from repro.core.topology import resolve_levels
+
+    cfg = pcfg.collective
+    # innermost (fast) first: on key collisions the slow axis wins
+    dp_axes = [a for a in ("data", "pod")
+               if a in mesh.axis_names and mesh.shape[a] > 1]
+    sizes = collectives.bucket_sizes(
+        params, cfg.bucket_bytes, leaf_specs=leaf_specs,
+        n_model=dict(mesh.shape).get("model"))
+    # largest buckets dominate step time; bound warm-up cost
+    sizes = sorted(set(sizes), key=lambda t: -t[0])[:max_buckets]
+    results = []
+    for ax in dp_axes:
+        p = mesh.shape[ax]
+        pos = mesh.axis_names.index(ax)
+        sel = [0] * mesh.devices.ndim
+        sel[pos] = slice(None)
+        axis_devs = mesh.devices[tuple(sel)]
+        tune_mesh = compat.make_mesh((p,), (ax,), devices=axis_devs)
+        algorithms = autotune._ALGORITHMS
+        if resolve_levels(p, cfg.hier_spec) is not None:
+            algorithms = algorithms + ("hier",)
+        for n, dtype in sizes:
+            nbytes = n * dtype.itemsize
+            X = jnp.zeros((n,), dtype)
+
+            def runner(algo, b, _X=X, _p=p, _ax=ax, _mesh=tune_mesh):
+                compress = algo.endswith(autotune.COMPRESSED_SUFFIX)
+                base = algo[:-len(autotune.COMPRESSED_SUFFIX)] if compress \
+                    else algo
+                ccfg = dataclasses.replace(cfg, method=base,
+                                           num_blocks=int(b),
+                                           compress_inter_group=compress)
+                f = jax.jit(compat.shard_map(
+                    lambda x: collectives.all_reduce(x, _ax, _p, ccfg),
+                    mesh=_mesh, in_specs=_P(), out_specs=_P(),
+                    check_vma=False))
+                f(_X).block_until_ready()  # compile + warm
+                ts = []
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    f(_X).block_until_ready()
+                    ts.append(time.perf_counter() - t0)
+                return min(ts)
+
+            res = autotune.tune(
+                runner, p, nbytes, str(jnp.dtype(dtype)),
+                cfg.comm_model.name, cfg.comm_model,
+                algorithms=algorithms, group_size=cfg.hier_spec,
+                compress_inter_group=cfg.compress_inter_group)
+            results.append((ax, nbytes, res))
+            if verbose:
+                tag = "+bf16" if res.compressed else ""
+                print(f"warmup[{ax} p={p}] {nbytes}B {jnp.dtype(dtype).name}"
+                      f" -> {res.algorithm}{tag}/b={res.num_blocks}"
+                      f" ({res.time_s * 1e6:.0f}us)")
+    return results
+
+
 def build_optimizer(arch_mod, lr: float, steps: int):
     sched_name = getattr(arch_mod, "TRAIN_SCHEDULE", "cosine")
     warmup = max(5, steps // 20)
@@ -71,6 +165,8 @@ def train_loop(args, fail_at: int | None = None) -> dict:
 
     params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
     params = jax.device_put(params, step_fns._named(mesh, sh["params"]))
+    if getattr(args, "autotune_warmup", False):
+        autotune_warmup(mesh, pcfg, params, leaf_specs=sh["params"])
     opt_state = jax.device_put(sh["opt_init"](params),
                                step_fns._named(mesh, sh["opt"]))
 
@@ -131,6 +227,10 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--collective", default=None,
                     help="override: dptree|sptree|redbcast|ring|hier|psum|auto")
+    ap.add_argument("--autotune-warmup", action="store_true",
+                    help="before step 0, measure the collective candidates at "
+                         "the actual gradient bucket sizes on this mesh and "
+                         "cache the winners for method='auto'")
     ap.add_argument("--max-restarts", type=int, default=3)
     args = ap.parse_args(argv)
 

@@ -95,14 +95,14 @@ def test_auto_method_uses_measured_hit(tmp_cache):
 
     p, nbytes = 8, 1000 * 4
     cfg = co.CollectiveConfig(method="auto")
-    algo0, nb0, _ = co._pick("auto", p, nbytes, cfg, "float32")
+    algo0, nb0, _, _ = co._pick("auto", p, nbytes, cfg, "float32")
     assert nb0 is None  # no cache entry yet: analytic pick
     at.get_cache().put(p, nbytes, "float32", cfg.comm_model.name,
                        at.TuneResult("sptree", 11, 3.3e-5))
-    algo, nb, _ = co._pick("auto", p, nbytes, cfg, "float32")
+    algo, nb, _, _ = co._pick("auto", p, nbytes, cfg, "float32")
     assert (algo, nb) == ("sptree", 11)
     # other sizes still fall through to the model
-    algo2, nb2, _ = co._pick("auto", p, nbytes * 2, cfg, "float32")
+    algo2, nb2, _, _ = co._pick("auto", p, nbytes * 2, cfg, "float32")
     assert nb2 is None and algo2 in ("dptree", "sptree", "redbcast", "ring")
 
 
@@ -117,18 +117,70 @@ def test_auto_degrades_on_stale_or_infeasible_hit(tmp_cache):
     # hier measured with a group shape that can't run at p=8
     at.get_cache().put(p, nbytes, "float32", cfg.comm_model.name,
                        at.TuneResult("hier", 4, 1e-5, group_size=5))
-    algo, nb, gs = co._pick("auto", p, nbytes, cfg, "float32")
+    algo, nb, gs, _ = co._pick("auto", p, nbytes, cfg, "float32")
     assert algo != "hier" and nb is None
     # malformed entry naming 'auto' itself
     at.get_cache().put(p, nbytes, "float32", cfg.comm_model.name,
                        at.TuneResult("auto", 1, 1e-5))
-    algo, nb, _ = co._pick("auto", p, nbytes, cfg, "float32")
+    algo, nb, _, _ = co._pick("auto", p, nbytes, cfg, "float32")
     assert algo in ("dptree", "sptree", "redbcast", "ring")
-    # feasible hier hit replays ITS measured group size
+    # feasible hier hit replays ITS measured group size (as a level spec)
     at.get_cache().put(p, nbytes, "float32", cfg.comm_model.name,
                        at.TuneResult("hier", 2, 1e-5, group_size=2))
-    algo, nb, gs = co._pick("auto", p, nbytes, cfg, "float32")
-    assert (algo, nb, gs) == ("hier", 2, 2)
+    algo, nb, gs, compress = co._pick("auto", p, nbytes, cfg, "float32")
+    assert (algo, nb, gs, compress) == ("hier", 2, (2,), False)
+    # N-level hit replays its measured level tuple
+    at.get_cache().put(p, nbytes, "float32", cfg.comm_model.name,
+                       at.TuneResult("hier", 2, 1e-5, group_size=(2, 2)))
+    algo, nb, gs, compress = co._pick("auto", p, nbytes, cfg, "float32")
+    assert (algo, nb, gs, compress) == ("hier", 2, (2, 2), False)
+
+
+def test_compressed_hit_needs_local_opt_in(tmp_cache):
+    """A hier entry timed with the bf16 inter-group wire replays compressed
+    ONLY for configs that set compress_inter_group — the lossy wire is never
+    applied on the strength of someone else's cache entry."""
+    from repro.core import collectives as co
+
+    p, nbytes = 8, 2048
+    at.get_cache().put(p, nbytes, "float32", cm.TPU_V5E.name,
+                       at.TuneResult("hier", 3, 1e-5, group_size=(2, 2),
+                                     compressed=True))
+    plain = co.CollectiveConfig(method="auto")
+    algo, nb, gs, compress = co._pick("auto", p, nbytes, plain, "float32")
+    assert algo != "hier" and not compress  # falls through to the model
+    opted = co.CollectiveConfig(method="auto", compress_inter_group=True)
+    algo, nb, gs, compress = co._pick("auto", p, nbytes, opted, "float32")
+    assert (algo, nb, gs, compress) == ("hier", 3, (2, 2), True)
+
+
+def test_compressed_candidates_and_tune_roundtrip(tmp_cache):
+    """compress_inter_group doubles the hier candidates with '+bf16' twins;
+    a compressed winner round-trips through the JSON cache with its level
+    tuple and compressed flag intact."""
+    cands = at.candidate_settings(16, 1 << 20, cm.TPU_V5E_INTERPOD,
+                                  algorithms=("dptree", "hier"),
+                                  group_size=(2, 2),
+                                  compress_inter_group=True)
+    algos = {a for a, _ in cands}
+    assert "hier" in algos and "hier" + at.COMPRESSED_SUFFIX in algos
+    # without the opt-in, no compressed candidates appear
+    cands0 = at.candidate_settings(16, 1 << 20, cm.TPU_V5E_INTERPOD,
+                                   algorithms=("dptree", "hier"),
+                                   group_size=(2, 2))
+    assert all(not a.endswith(at.COMPRESSED_SUFFIX) for a, _ in cands0)
+
+    def runner(algo, b):  # compressed hier wins
+        return 1.0 if algo == "hier" + at.COMPRESSED_SUFFIX else 2.0
+
+    res = at.tune(runner, 16, 1 << 20, "float32", "cpu16",
+                  cm.TPU_V5E_INTERPOD, algorithms=("dptree", "hier"),
+                  group_size=(2, 2), compress_inter_group=True)
+    assert res.algorithm == "hier" and res.compressed
+    assert res.group_size == (2, 2)
+    hit = at.AutotuneCache(at.get_cache().path).load().get(
+        16, 1 << 20, "float32", "cpu16")
+    assert hit == res
 
 
 def test_hier_rejects_non_commutative_op(tmp_cache):

@@ -208,6 +208,107 @@ def test_hier_allreduce_matches_psum():
     """)
 
 
+def test_hier3_matches_reference_all_ops():
+    """Acceptance: the 3-level hierarchy (chip ring -> node ring -> pod
+    dual-root tree) matches the jnp reference on an 8-device CPU mesh for
+    sum/max/min across multiple level-spec shapes, including all-intra
+    degenerate ones (g == 1: pure nested rings, no slow stage)."""
+    run_sub("""
+        from repro.core.dptree import hier_allreduce
+        rng = np.random.default_rng(11)
+        ops = ((jnp.add, lambda X: X.sum(0)),
+               (jnp.maximum, lambda X: X.max(0)),
+               (jnp.minimum, lambda X: X.min(0)))
+        for m in (1, 5, 37, 103):
+            X = rng.standard_normal((p, m)).astype(np.float32)
+            for spec in ((2, 2), (2, 4), (4, 2)):
+                for op, ref in ops:
+                    fn = lambda x: hier_allreduce(x, "data", p,
+                                                  group_size=spec,
+                                                  num_blocks=3, op=op)
+                    sm = shard_map(lambda x: fn(x[0])[None], mesh=mesh,
+                                   in_specs=P("data", None),
+                                   out_specs=P("data", None))
+                    out = np.asarray(jax.jit(sm)(jnp.asarray(X)))
+                    want = ref(X)
+                    for r in range(p):
+                        np.testing.assert_allclose(
+                            out[r], want, rtol=1e-5, atol=1e-5,
+                            err_msg=f"m={m} spec={spec} op={op.__name__}")
+        print("ok")
+    """)
+
+
+def test_hier3_via_collective_config_and_2d_payload():
+    """levels= spec through the public all_reduce, incl. a 2-D lanes payload
+    (the gradient-bucket layout)."""
+    run_sub("""
+        from repro.core.collectives import CollectiveConfig, all_reduce
+        rng = np.random.default_rng(12)
+        cfg = CollectiveConfig(method="hier", levels=(2, 2))
+        for shape in ((257,), (37, 8)):
+            X = rng.standard_normal((p,) + shape).astype(np.float32)
+            spec = P("data", *([None] * len(shape)))
+            sm = shard_map(lambda x: all_reduce(x[0], "data", p, cfg)[None],
+                           mesh=mesh, in_specs=spec, out_specs=spec)
+            out = np.asarray(jax.jit(sm)(jnp.asarray(X)))
+            for r in range(p):
+                np.testing.assert_allclose(out[r], X.sum(0), rtol=1e-5,
+                                           atol=1e-5)
+        print("ok")
+    """)
+
+
+def test_compress_inter_group_bound_and_exact_off():
+    """bf16 slow-stage compression stays within the documented relative-error
+    bound for positive sums; compress_inter_group=False is bit-identical to
+    the plain two-level path (PR 1's public entry, no new kwargs)."""
+    run_sub("""
+        from repro.core.collectives import CollectiveConfig, all_reduce
+        from repro.core.dptree import hier_allreduce
+        rng = np.random.default_rng(13)
+        m = 4097
+        X = (np.abs(rng.standard_normal((p, m))) + 0.1).astype(np.float32)
+        want = X.sum(0)
+
+        def run(fn, data=X):
+            sm = shard_map(lambda x: fn(x[0])[None], mesh=mesh,
+                           in_specs=P("data", None),
+                           out_specs=P("data", None))
+            return np.asarray(jax.jit(sm)(jnp.asarray(data)))
+
+        legacy = run(lambda x: all_reduce(
+            x, "data", p,
+            CollectiveConfig(method="hier", group_size=4, num_blocks=4)))
+        off = run(lambda x: hier_allreduce(x, "data", p, group_size=(4,),
+                                           num_blocks=4,
+                                           compress_inter_group=False))
+        assert (legacy == off).all()   # bit-identical, not just close
+
+        for spec in ((4,), (2, 2)):
+            on = run(lambda x: hier_allreduce(x, "data", p, group_size=spec,
+                                              num_blocks=4,
+                                              compress_inter_group=True))
+            g = p // int(np.prod(spec))
+            # documented bound (docs/algorithms.md): positive-sum relative
+            # error <= (2 + ceil(log2 g)) * 2^-8 through the bf16 wire
+            bound = (2 + int(np.ceil(np.log2(max(g, 2))))) * 2.0 ** -8
+            rel = np.max(np.abs(on - want[None]) / np.abs(want[None]))
+            assert rel <= bound, (spec, rel, bound)
+            assert rel > 0     # the flag really engaged the lossy wire
+        # non-f32 payloads pass through uncompressed: flag is a no-op
+        Xi = (X * 64).astype(np.int32)
+        on_i = run(lambda x: hier_allreduce(x, "data", p, group_size=(2, 2),
+                                            num_blocks=4,
+                                            compress_inter_group=True),
+                   data=Xi)
+        off_i = run(lambda x: hier_allreduce(x, "data", p, group_size=(2, 2),
+                                             num_blocks=4), data=Xi)
+        assert (on_i == off_i).all() and (on_i[0] == Xi.sum(0)).all()
+        print("ok")
+    """)
+
+
 def test_hier_via_collective_config():
     """method='hier' through the public all_reduce/bucketed API."""
     run_sub("""

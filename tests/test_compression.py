@@ -1,0 +1,116 @@
+"""bf16 inter-group compression: kernels, wire-op algebra, error bounds.
+
+The multidevice end-to-end check lives in test_collectives_multidevice.py;
+here we pin the numerics cheaply on one device:
+
+* the Pallas cast kernels (interpret mode) are EXACTLY ``astype`` — the
+  kernel only buys the tiled HBM schedule, never different rounding,
+* the compressed accumulation algebra — bf16 payloads, f32 accumulate,
+  bf16 recompress per tree combine — keeps the relative error of a
+  positive-sum allreduce within the bound documented in
+  ``docs/algorithms.md``: ``(2 + ceil(log2 g)) * 2^-8`` for ``g`` groups.
+"""
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.core.dptree import _bf16_wire_op
+from repro.kernels import quantize
+
+BOUND = lambda g: (2 + int(np.ceil(np.log2(max(g, 2))))) * 2.0 ** -8
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(min_value=1, max_value=70_000), seed=st.integers(0, 99))
+def test_cast_kernels_match_astype_exactly(m, seed):
+    x = np.random.default_rng(seed).standard_normal(m).astype(np.float32)
+    x[::7] *= 1e30  # exercise the exponent range bf16 keeps
+    c = quantize.compress_bf16(jnp.asarray(x), interpret=True)
+    assert c.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(c),
+                                  np.asarray(jnp.asarray(x).astype(jnp.bfloat16)))
+    d = quantize.decompress_bf16(c, interpret=True)
+    assert d.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(d),
+                                  np.asarray(c.astype(jnp.float32)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(g=st.sampled_from([2, 4, 8, 16, 64]),
+       m=st.integers(min_value=1, max_value=2048),
+       seed=st.integers(0, 99))
+def test_compressed_accumulation_error_bound(g, m, seed):
+    """Fold g positive stripes through the bf16 wire op along a binary tree
+    (the worst-case depth of the dual-root inter-group exchange) and compare
+    to the exact f64 sum: max relative error <= (2 + ceil(log2 g)) * 2^-8.
+
+    Positivity matters: the bound is for non-cancelling sums (gradient-bucket
+    magnitudes); cancellation can amplify *relative* error without bound for
+    any finite wire precision, which is why compress_inter_group is opt-in.
+    """
+    rng = np.random.default_rng(seed)
+    parts = [np.abs(rng.standard_normal(m)).astype(np.float32) + 1e-3
+             for _ in range(g)]
+    want = np.sum(np.stack(parts, 0).astype(np.float64), axis=0)
+    wop = _bf16_wire_op(jnp.add)
+
+    def fold(lo, hi):
+        if hi - lo == 1:
+            return jnp.asarray(parts[lo]).astype(jnp.bfloat16)
+        mid = (lo + hi) // 2
+        return wop(fold(lo, mid), fold(mid, hi))
+
+    got = np.asarray(fold(0, g).astype(jnp.float32)).astype(np.float64)
+    rel = np.max(np.abs(got - want) / np.abs(want))
+    assert rel <= BOUND(g), (g, m, rel, BOUND(g))
+
+
+def test_wire_op_widens_then_rounds_once():
+    """The wire op widens to f32, reduces, and rounds ONCE on recompress:
+    256 + 1.5 = 257.5 -> nearest bf16 is 258 (ulp at 256 is 2). An engine
+    that reduced in bf16 ulps directly would drop the sub-ulp addend."""
+    wop = _bf16_wire_op(jnp.add)
+    out = wop(jnp.asarray([256.0], jnp.bfloat16),
+              jnp.asarray([1.5], jnp.bfloat16))
+    assert out.dtype == jnp.bfloat16
+    assert float(out[0]) == 258.0
+    # max/min ride the same wrapper unchanged
+    mx = _bf16_wire_op(jnp.maximum)(jnp.asarray([-3.0], jnp.bfloat16),
+                                    jnp.asarray([2.0], jnp.bfloat16))
+    assert float(mx[0]) == 2.0
+
+
+def test_bucket_sizes_matches_bucketing():
+    """bucket_sizes reports the reductions the reduce path issues: greedy
+    dtype buckets split at bucket_bytes, partitioned by sharding kind first
+    (model-sharded and replicated leaves never share a bucket; other-sharded
+    leaves reduce per leaf)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.collectives import bucket_sizes
+    tree = {"a": jnp.zeros((300,), jnp.float32),
+            "b": jnp.zeros((300,), jnp.float32),
+            "c": jnp.zeros((64,), jnp.bfloat16)}
+    out = bucket_sizes(tree, bucket_bytes=1 << 30)
+    assert sorted(out) == [(64, jnp.dtype(jnp.bfloat16)),
+                           (600, jnp.dtype(jnp.float32))]
+    # a tiny bucket limit splits the f32 group
+    out2 = bucket_sizes(tree, bucket_bytes=300 * 4)
+    assert sorted(n for n, d in out2 if d == jnp.dtype(jnp.float32)) \
+        == [300, 300]
+    # sharding kinds split buckets the way bucketed_all_reduce does: a
+    # model-sharded matrix, a replicated bias (same dtype!), and an
+    # other-sharded leaf produce THREE f32 reductions, not one
+    tree2 = {"w": jnp.zeros((8, 16), jnp.float32),     # model on dim 1
+             "bias": jnp.zeros((16,), jnp.float32),    # replicated
+             "odd": jnp.zeros((6, 4), jnp.float32)}    # sharded over 'data'
+    specs = {"w": P(None, "model"), "bias": P(), "odd": P("data")}
+    out3 = bucket_sizes(tree2, leaf_specs=specs, n_model=4)
+    assert sorted(out3) == [(16, jnp.dtype(jnp.float32)),
+                            (24, jnp.dtype(jnp.float32)),
+                            (128, jnp.dtype(jnp.float32))]
+    # without specs everything is one replicated f32 bucket
+    assert bucket_sizes(tree2) == [(168, jnp.dtype(jnp.float32))]

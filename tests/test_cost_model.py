@@ -81,6 +81,47 @@ def test_hier_time_degenerate_groups():
         == cm.ring_time(8, m, cm.TPU_V5E)
 
 
+def test_three_level_beats_flat_and_two_level_on_interpod():
+    """Acceptance: with per-level (alpha, beta) — fast chip ICI, mid node
+    links, slow inter-pod fabric — the 3-level composition undercuts both the
+    flat dptree and the 2-level hierarchy across the gradient-bucket range,
+    and compression shaves the slow term further."""
+    p = 256
+    inter = cm.TPU_V5E_INTERPOD                      # slow: pods
+    chip = cm.TPU_V5E                                # fast: intra-node ICI
+    node = cm.CommModel(alpha=3e-6, beta=1.0 / 40e9, gamma=cm.TPU_V5E.gamma,
+                        name="node_links")           # mid: node-to-node
+    for m in (1 << 20, 4 << 20, 16 << 20, 64 << 20):
+        b_f = cm.optimal_blocks(p, m, inter, "dptree")
+        b_2 = cm.optimal_blocks(p, m, inter, "hier", group_size=4)
+        b_3 = cm.optimal_blocks(p, m, inter, "hier", group_size=(4, 4))
+        t_flat = cm.dptree_time(p, m, b_f, inter)
+        t_2 = cm.hier_time(p, m, b_2, inter, group_size=4, intra_model=chip)
+        t_3 = cm.hier_time(p, m, b_3, inter, group_size=(4, 4),
+                           level_models=(chip, node))
+        assert t_3 < t_2 < t_flat, (m, t_3, t_2, t_flat)
+        b_3c = cm.optimal_blocks(p, m, inter, "hier", group_size=(4, 4),
+                                 compression="bf16")
+        t_3c = cm.hier_time(p, m, b_3c, inter, group_size=(4, 4),
+                            level_models=(chip, node), compression="bf16")
+        assert t_3c < t_3
+    assert cm.best_algorithm(p, 4 << 20, inter, group_size=(4, 4),
+                             level_models=(chip, node)) == "hier"
+
+
+def test_hier_time_level_model_validation_and_factor():
+    with pytest.raises(ValueError, match="one CommModel per level"):
+        cm.hier_time(16, 1 << 20, 4, cm.TPU_V5E_INTERPOD, group_size=(2, 2),
+                     level_models=(cm.TPU_V5E,))
+    assert cm.COMPRESS_FACTOR["bf16"] == 0.5 and cm.COMPRESS_FACTOR[None] == 1.0
+    # an all-intra spec prices as the pure multi-level ring (no slow term),
+    # so compression changes nothing there
+    t = cm.hier_time(8, 1 << 20, 4, cm.TPU_V5E_INTERPOD, group_size=(2, 4))
+    tc = cm.hier_time(8, 1 << 20, 4, cm.TPU_V5E_INTERPOD, group_size=(2, 4),
+                      compression="bf16")
+    assert t == tc
+
+
 def test_best_algorithm_without_group_size_unchanged():
     p = 256
     model = cm.TPU_V5E

@@ -100,10 +100,63 @@ def test_hierarchy_rejects_bad_group_size():
         build_hierarchy(8, 3)
     with pytest.raises(ValueError):
         build_hierarchy(8, 0)
+    with pytest.raises(ValueError):
+        build_hierarchy(8, (2, 3))  # prod 6 does not divide 8
     # default picks 4 | 2 | 1
     assert build_hierarchy(8).group_size == 4
     assert build_hierarchy(6).group_size == 2
     assert build_hierarchy(5).group_size == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(g=st.integers(min_value=1, max_value=12),
+       s0=st.sampled_from([2, 3, 4]),
+       s1=st.sampled_from([2, 3]))
+def test_three_level_hierarchy_invariants(g, s0, s1):
+    """N-level shape: strides nest little-endian, every level ring is a valid
+    permutation that only moves one level coordinate, and the inter tree runs
+    over stripes of the full prod(levels)."""
+    from repro.core.topology import build_hierarchy
+    p = g * s0 * s1
+    h = build_hierarchy(p, (s0, s1))
+    assert h.levels == (s0, s1)
+    assert h.strides == (1, s0)
+    assert (h.group_size, h.num_groups) == (s0 * s1, g)
+    assert h.inter_topo.p == p and h.group_tree.p == g
+    # legacy aliases point at the innermost level
+    assert h.ring_fwd == h.level_rings[0][0]
+    assert h.ring_bwd == h.level_rings[0][1]
+    S = h.group_size
+    for j, (s, t) in enumerate(zip(h.levels, h.strides)):
+        fwd, bwd = h.level_rings[j]
+        assert bwd == tuple((d, a) for a, d in fwd)
+        srcs = [a for a, _ in fwd]
+        dsts = [d for _, d in fwd]
+        assert sorted(srcs) == list(range(p)) and len(set(dsts)) == p
+        for a, d in fwd:
+            # stays inside the same top-level group...
+            assert a // S == d // S
+            # ...advances exactly the level-j coordinate by +1 (mod s)...
+            ca, cd = (a // t) % s, (d // t) % s
+            assert cd == (ca + 1) % s
+            # ...and touches no other coordinate
+            assert a - ca * t == d - cd * t
+
+
+def test_resolve_levels_rules():
+    from repro.core.topology import as_levels, resolve_levels
+    # normalization: ints become 1-tuples, size-1 levels are dropped
+    assert as_levels(4) == (4,)
+    assert as_levels((1, 2, 1, 4)) == (2, 4)
+    assert as_levels(None) is None
+    # feasibility: every level divides out, >= 2 groups remain
+    assert resolve_levels(16, (2, 2)) == (2, 2)
+    assert resolve_levels(16, (2, 4)) == (2, 4)
+    assert resolve_levels(8, (2, 4)) is None     # g == 1
+    assert resolve_levels(8, (2, 3)) is None     # 6 does not divide 8
+    assert resolve_levels(8, None) == (4,)       # default two-level
+    assert resolve_levels(5, None) is None       # flat only
+    assert resolve_levels(8, "junk") is None     # malformed spec, no raise
 
 
 def test_p1_p2_degenerate():

@@ -1,0 +1,65 @@
+"""Execute every ```python code block in the documentation.
+
+Part of ``make verify``: README.md and docs/*.md promise runnable examples,
+so this script extracts each fenced ```python block and executes it. Blocks
+within one file share a namespace (later blocks may use earlier imports) and
+execute in order; files are independent. Non-python fences (```bash,
+```text, ...) are skipped — use them for anything not meant to run.
+
+Usage:  PYTHONPATH=src python tools/check_docs.py [files...]
+        (no args: README.md + docs/*.md from the repo root)
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+import traceback
+
+FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+
+
+def doc_files(root: str) -> list:
+    out = [os.path.join(root, "README.md")]
+    out += sorted(glob.glob(os.path.join(root, "docs", "*.md")))
+    return [f for f in out if os.path.exists(f)]
+
+
+def run_file(path: str) -> int:
+    with open(path) as f:
+        text = f.read()
+    blocks = FENCE.findall(text)
+    ns: dict = {"__name__": f"doccheck:{os.path.basename(path)}"}
+    for idx, block in enumerate(blocks, 1):
+        # report the block's first line of the file for clickable errors
+        line = text[: text.index(block)].count("\n") + 1
+        try:
+            code = compile(block, f"{path}:block{idx}", "exec")
+            exec(code, ns)
+        except Exception:
+            print(f"FAIL {path} block {idx} (near line {line}):",
+                  file=sys.stderr)
+            traceback.print_exc()
+            return 1
+        print(f"ok   {path} block {idx}")
+    if not blocks:
+        print(f"note {path}: no python blocks")
+    return 0
+
+
+def main(argv=None) -> int:
+    args = list(argv if argv is not None else sys.argv[1:])
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = args or doc_files(root)
+    rc = 0
+    for path in files:
+        rc |= run_file(path)
+    print("docs check:", "FAILED" if rc else "PASSED",
+          f"({len(files)} files)")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())
