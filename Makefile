@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test docs-check bench bench-collectives
+.PHONY: verify test docs-check bench bench-collectives bench-serving
 
 verify:
 	$(PY) -m pytest -x -q
@@ -19,3 +19,6 @@ bench:
 
 bench-collectives:
 	$(PY) -m benchmarks.run --only collectives
+
+bench-serving:
+	$(PY) -m benchmarks.run --only serving --artifact BENCH_serving.json

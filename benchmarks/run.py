@@ -12,7 +12,7 @@ import sys
 import traceback
 
 from benchmarks import (bench_autotune, bench_blocksize, bench_collectives,
-                        bench_kernels, bench_latency_model)
+                        bench_kernels, bench_latency_model, bench_serving)
 
 SUITES = {
     # paper Fig 1 / Table 2: the reduction-to-all implementations x sizes
@@ -25,6 +25,8 @@ SUITES = {
     "latency": bench_latency_model.run,
     # kernel layer
     "kernels": bench_kernels.run,
+    # continuous batching vs the static loop on staggered arrivals
+    "serving": bench_serving.run,
 }
 
 

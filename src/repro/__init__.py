@@ -6,6 +6,8 @@ Public surface:
   repro.models      — the architecture zoo (dense/MoE/SSM/hybrid/enc-dec)
   repro.configs     — assigned architectures x shape suites
   repro.launch      — mesh, dry-run, train/serve drivers
+  repro.serving     — continuous-batching engine (slots, telemetry, fleet)
+  repro.runtime     — fault tolerance (heartbeats, re-mesh, restarts)
   repro.kernels     — Pallas TPU kernels (+ jnp oracles)
 """
 

@@ -236,11 +236,53 @@ def make_train_step(cfg, pcfg: ParallelConfig, mesh,
 # prefill + serve (decode) steps
 # --------------------------------------------------------------------------
 
-def make_prefill_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite):
-    """Full-sequence forward + last-position logits (serving prefill proxy;
-    see EXPERIMENTS.md §Dry-run for the KV-cache-materialization caveat)."""
+def make_prefill_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
+                      into_slots: bool = False):
+    """Prefill step builder, two regimes:
+
+    * ``into_slots=False`` — full-sequence forward + last-position logits
+      (the dry-run's serving prefill proxy; see EXPERIMENTS.md §Dry-run for
+      the KV-cache-materialization caveat). step(params, inputs) -> logits.
+    * ``into_slots=True`` — the serving engine's cache-writing prefill:
+      step(params, tokens (1, Tc), caches, slot (), length ()) ->
+      (first-token logits (V,), caches). The prompt runs through the stack
+      as a SINGLE row against a fresh zero cache — prefill cost scales with
+      the admitted request, not with ``n_slots`` — and the finished row is
+      spliced into the slot with one dynamic-update per cache leaf, leaving
+      every in-flight slot untouched (admission interleaves with decode).
+      One compilation per prompt bucket length Tc; ``slot`` is traced, so
+      slot churn never re-jits.
+    """
     pspecs = (fsdp_pspecs(cfg, mesh) if pcfg.dp_mode == "fsdp"
               else model_pspecs(cfg, mesh))
+    dp = _dp_axes(mesh)
+
+    if into_slots:
+        cspecs = cache_pspecs(cfg, mesh, suite.global_batch, suite.seq_len,
+                              per_slot=True)
+
+        def slot_body(params, tokens, caches, slot, length):
+            from repro.models.layers import mesh_ctx
+            with mesh_ctx(mesh):
+                row0 = tf.init_cache(cfg, 1, suite.seq_len, per_slot=True)
+                logits, row = tf.prefill_step(
+                    params, cfg, {"tokens": tokens}, row0,
+                    length.reshape(1), jnp.ones((1,), bool))
+
+            def ins(full, r):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    full, r.astype(full.dtype), slot, axis=1)
+
+            return logits[0], jax.tree.map(ins, caches, row)
+
+        step = jax.jit(
+            slot_body,
+            in_shardings=(_named(mesh, pspecs), None, _named(mesh, cspecs),
+                          None, None),
+            out_shardings=(NamedSharding(mesh, P(None)),
+                           _named(mesh, cspecs)),
+            donate_argnums=(2,))
+        return step, {"params": pspecs, "cache": cspecs}
 
     def body(params, inputs):
         from repro.models.layers import mesh_ctx
@@ -249,13 +291,13 @@ def make_prefill_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite):
             return tf.unembed(params, cfg,
                               hs[:, -1:]).astype(jnp.float32)[:, 0]
 
-    dp = _dp_axes(mesh)
     step = jax.jit(body, in_shardings=(_named(mesh, pspecs), None),
                    out_shardings=NamedSharding(mesh, P(dp)))
     return step, {"params": pspecs, "batch": P(dp)}
 
 
-def cache_pspecs(cfg, mesh, batch: int, max_len: int = 8) -> Any:
+def cache_pspecs(cfg, mesh, batch: int, max_len: int = 8,
+                 per_slot: bool = False) -> Any:
     """Sharding for the stacked KV/state caches.
 
     Shard batch over the DP axes when divisible; otherwise (long-context B=1)
@@ -265,7 +307,8 @@ def cache_pspecs(cfg, mesh, batch: int, max_len: int = 8) -> Any:
     dp = _dp_axes(mesh)
     n_dp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
     shard_batch = bool(dp) and batch % n_dp == 0 and batch >= n_dp
-    caches = tf.init_cache(cfg, batch, max_len, abstract=True)
+    caches = tf.init_cache(cfg, batch, max_len, abstract=True,
+                           per_slot=per_slot)
 
     def spec(leaf):
         nd = leaf.ndim
@@ -287,18 +330,45 @@ def cache_pspecs(cfg, mesh, batch: int, max_len: int = 8) -> Any:
     return jax.tree.map(spec, caches)
 
 
-def make_serve_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite):
-    """Returns (jitted_step, shardings):
-    step(params, inputs, caches) -> (logits, new_caches)."""
+def make_serve_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
+                    slots: bool = False):
+    """Returns (jitted_step, shardings).
+
+    ``slots=False``: step(params, inputs, caches) -> (logits, new_caches) —
+    the fixed-batch decode step (every row advances every call).
+
+    ``slots=True``: step(params, inputs, caches, active) -> (logits,
+    new_caches) against per-slot caches (``pos`` per batch row). ``active``
+    (B,) bool marks rows holding in-flight requests; inactive rows compute
+    but do not advance, so one compiled step serves any mix of busy/free
+    slots — the continuous-batching engine's decode tick.
+    """
     pspecs = (fsdp_pspecs(cfg, mesh) if pcfg.dp_mode == "fsdp"
               else model_pspecs(cfg, mesh))
-    cspecs = cache_pspecs(cfg, mesh, suite.global_batch, suite.seq_len)
+    cspecs = cache_pspecs(cfg, mesh, suite.global_batch, suite.seq_len,
+                          per_slot=slots)
     dp = _dp_axes(mesh)
     n_dp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
     shard_batch = dp and suite.global_batch % max(n_dp, 1) == 0 \
         and suite.global_batch >= n_dp
     bspec = P(dp if len(dp) > 1 else (dp[0] if dp else None)) \
         if shard_batch else P(None)
+
+    if slots:
+        def slot_body(params, inputs, caches, active):
+            from repro.models.layers import mesh_ctx
+            with mesh_ctx(mesh):
+                logits, new_caches = tf.decode_step(params, cfg, inputs,
+                                                    caches, active=active)
+            return logits, new_caches
+
+        step = jax.jit(
+            slot_body,
+            in_shardings=(_named(mesh, pspecs), None, _named(mesh, cspecs),
+                          None),
+            out_shardings=(NamedSharding(mesh, bspec), _named(mesh, cspecs)),
+            donate_argnums=(2,))
+        return step, {"params": pspecs, "cache": cspecs, "batch": bspec}
 
     def body(params, inputs, caches):
         from repro.models.layers import mesh_ctx

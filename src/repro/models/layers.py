@@ -433,6 +433,65 @@ def attention_decode(p: Params, cfg: AttnConfig, x: jax.Array,
     return out, new_cache
 
 
+def attention_decode_slots(p: Params, cfg: AttnConfig, x: jax.Array,
+                           cache: Params, cache_pos: jax.Array):
+    """Decode/prefill against a ring KV cache with PER-ROW positions.
+
+    The continuous-batching serving engine packs independent requests into
+    the batch rows of one cache ("slots"); each row advances at its own pace
+    and resets to position 0 when its slot is re-admitted, so one jitted step
+    serves any mix of in-flight requests.
+
+    x: (B, T, D) — T == 1 for a decode tick, T == the prompt bucket length
+    for slot prefill; cache_pos: (B,) int32 — tokens already cached per row.
+    Token t of row b is written at ring slot ``(cache_pos[b] + t) % S`` and
+    attends causally to absolute positions ``<= cache_pos[b] + t``. Requires
+    ``T <= S`` (otherwise one call would write a ring slot twice).
+    Returns (out (B, T, d_model), new_cache_dict).
+    """
+    B, T, _ = x.shape
+    S = cache["k"].shape[1]
+    positions = cache_pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+    q, k, v = _qkv(p, cfg, x, positions)
+    slots = jnp.mod(positions, S)                         # (B, T)
+    brow = jnp.arange(B)[:, None]
+
+    def write(arr, scale, val):
+        if arr.dtype == jnp.int8:
+            qv, sv = quantize_kv_rows(val)
+            return arr.at[brow, slots].set(qv), scale.at[brow, slots].set(sv)
+        return arr.at[brow, slots].set(val.astype(arr.dtype)), scale
+
+    ck, ks = write(cache["k"], cache.get("ks"), k)
+    cv, vs = write(cache["v"], cache.get("vs"), v)
+    new_cache = {"k": ck, "v": cv}
+    if ks is not None:
+        new_cache["ks"], new_cache["vs"] = ks, vs
+    cache_k = _cache_read(ck, ks, q.dtype)
+    cache_v = _cache_read(cv, vs, q.dtype)
+    # ring cache: after this call's writes the newest absolute position in
+    # row b is cache_pos[b] + T - 1; slot s holds last - ((last - s) mod S)
+    # (negative -> never written for this request)
+    last = (cache_pos + T - 1)[:, None]                   # (B, 1)
+    ki = last - jnp.mod(last - jnp.arange(S)[None], S)    # (B, S)
+    qpos = positions[..., None]                           # (B, T, 1)
+    valid = (ki[:, None, :] >= 0) & (ki[:, None, :] <= qpos)
+    if cfg.sliding_window is not None:
+        valid &= ki[:, None, :] > qpos - cfg.sliding_window
+    if cfg.chunk_size is not None:
+        valid &= (ki[:, None, :] // cfg.chunk_size) == (qpos // cfg.chunk_size)
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rep = H // KV
+    qg = q.reshape(B, T, KV, rep, dh)
+    logits = jnp.einsum("btgrd,bsgd->bgrts", qg, cache_k) / np.sqrt(dh)
+    logits = logits.astype(jnp.float32)
+    logits = jnp.where(valid[:, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrts,bsgd->btgrd", w, cache_v)
+    out = out.reshape(B, T, H * dh) @ p["wo"].astype(x.dtype)
+    return out, new_cache
+
+
 def attention_decode_partials(p: Params, cfg: AttnConfig, x: jax.Array,
                               cache_k: jax.Array, cache_v: jax.Array,
                               cache_pos: jax.Array, shard_start: jax.Array):

@@ -362,7 +362,11 @@ def _apply_sub(sp: Params, s: SubSpec, cfg: ModelConfig, x, positions,
     if s.kind == "attn":
         acfg = cfg.attn_cfg(s)
         if cache is not None:
-            o, kv = L.attention_decode(sp, acfg, h, cache, cache["pos"])
+            # per-slot caches (pos is (B,), serving engine) take the
+            # scatter-write path; scalar pos keeps the original decode op
+            fn = (L.attention_decode_slots if cache["pos"].ndim
+                  else L.attention_decode)
+            o, kv = fn(sp, acfg, h, cache, cache["pos"])
             new_cache = {**kv, "pos": cache["pos"]}
         else:
             o = L.attention(sp, acfg, h, positions)
@@ -503,9 +507,17 @@ def loss_fn(params, cfg: ModelConfig, inputs, aux_weight: float = 0.01):
 # --------------------------------------------------------------------------
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               kv_dtype=jnp.bfloat16, abstract: bool = False):
-    """Stacked (n_periods, ...) cache pytree matching the scan layout."""
+               kv_dtype=jnp.bfloat16, abstract: bool = False,
+               per_slot: bool = False):
+    """Stacked (n_periods, ...) cache pytree matching the scan layout.
+
+    With ``per_slot=True`` the attention position counters are per batch row
+    (shape ``(batch,)`` instead of scalar): each row is an independently
+    paced KV-cache *slot* for the continuous-batching serving engine, and
+    decode dispatches to the scatter-write slot path.
+    """
     KV, dh = cfg.n_kv_heads, cfg.hdim
+    pos_shape = (batch,) if per_slot else ()
     mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else \
          (lambda s, d: jnp.zeros(s, d))
 
@@ -521,10 +533,10 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                         "v": mk((batch, S, KV, dh), jnp.int8),
                         "ks": mk((batch, S, KV, 1), jnp.float32),
                         "vs": mk((batch, S, KV, 1), jnp.float32),
-                        "pos": mk((), jnp.int32)}
+                        "pos": mk(pos_shape, jnp.int32)}
             return {"k": mk((batch, S, KV, dh), kv_dtype),
                     "v": mk((batch, S, KV, dh), kv_dtype),
-                    "pos": mk((), jnp.int32)}
+                    "pos": mk(pos_shape, jnp.int32)}
         if s.kind == "mamba":
             spec = ssm.mamba_cache_spec(cfg.mamba_cfg(), batch,
                                         cfg.compute_dtype)
@@ -554,26 +566,128 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return tuple(caches)
 
 
-def decode_step(params, cfg: ModelConfig, inputs, caches, memory=None):
+def decode_step(params, cfg: ModelConfig, inputs, caches, memory=None,
+                active=None):
     """One-token decode. inputs: {'tokens': (B,1)} or {'embeds': (B,1,D)},
-    plus optional 'positions'. Returns (logits (B,V), new_caches)."""
+    plus optional 'positions'. Returns (logits (B,V), new_caches).
+
+    ``active`` (per-slot caches only): (B,) bool — rows whose slot currently
+    holds an in-flight request. Inactive rows still compute (one jitted step
+    serves any slot mix) but their position does NOT advance, so their next
+    real token overwrites whatever this tick scribbled at the write slot.
+    """
     x, _ = embed_inputs(params, cfg, inputs)
     x, _, new_caches = _run_stack(params["layers"], cfg.pattern, cfg, x,
                                   None, memory, caches)
     x = L.rmsnorm(params["final_norm"], x)
     logits = unembed(params, cfg, x)[:, -1]
-    return logits.astype(jnp.float32), advance_pos_stacked(new_caches)
+    return logits.astype(jnp.float32), advance_pos_stacked(new_caches, active)
 
 
-def advance_pos_stacked(caches):
+def advance_pos_stacked(caches, active=None):
     """Scan outputs stack new caches over periods already; bump positions."""
-    return advance_pos(caches)
+    return advance_pos(caches, active)
 
 
-def advance_pos(caches):
-    """Increment every attention cache position by one (post-step)."""
+def advance_pos(caches, active=None):
+    """Increment attention cache positions post-step: by one everywhere, or
+    (per-slot caches) only on rows where ``active`` is True."""
+    step = 1 if active is None else active.astype(jnp.int32)
+
     def bump(c):
         if isinstance(c, dict) and "pos" in c:
-            return {**c, "pos": c["pos"] + 1}
+            return {**c, "pos": c["pos"] + step}
         return c
     return tuple(bump(c) for c in caches)
+
+
+# --------------------------------------------------------------------------
+# KV-cache slot ops (continuous-batching serving)
+# --------------------------------------------------------------------------
+
+def supports_slot_serving(cfg: ModelConfig) -> bool:
+    """Whether the continuous-batching engine can drive this architecture.
+
+    Slot prefill right-pads prompts to a bucket length; attention masks the
+    pad positions out of every future read, but a recurrent-state mixer
+    (mamba/rwkv) would fold pad tokens into its state, and the stub embed /
+    encoder-decoder frontends have no token prompts to prefill.
+    """
+    kinds = {s.kind for layer in cfg.pattern for s in layer}
+    return (cfg.input_mode == "tokens" and not cfg.n_enc_layers
+            and kinds <= {"attn", "mlp", "moe"})
+
+
+def reset_cache_slots(caches, free_mask):
+    """Free the cache rows where ``free_mask`` (B,) is True.
+
+    Per-slot caches only. Resetting a row's ``pos`` to zero is what
+    invalidates it — the ring-validity mask derives every readable position
+    from ``pos``, so stale K/V behind a zeroed counter can never be attended
+    again and the slot is reusable without touching the jitted step
+    (admission overwrites ring slots ``0..len-1`` on the next prefill).
+    Non-``pos`` leaves are zeroed too so a freed slot holds no request data.
+    """
+    def fix(c):
+        def leaf(v):
+            if v.ndim < 2:  # stacked scalar counters never reach here
+                return v
+            m = free_mask.reshape((1, -1) + (1,) * (v.ndim - 2))
+            return jnp.where(m, jnp.zeros_like(v), v)
+        if isinstance(c, dict) and "pos" in c:
+            return {**c, "pos": jnp.where(free_mask[None], 0, c["pos"]),
+                    **{k: leaf(c[k]) for k in c if k != "pos"}}
+        return jax.tree.map(leaf, c)
+    return tuple(fix(c) for c in caches)
+
+
+def prefill_step(params, cfg: ModelConfig, inputs, caches, lengths, active):
+    """Prefill prompts into per-slot caches (continuous-batching admission).
+
+    inputs: {'tokens': (B, Tc)} right-padded prompts; lengths: (B,) int32
+    true prompt lengths (<= Tc); active: (B,) bool — rows being admitted this
+    call. Active rows restart at position zero: ring slots ``0..len-1`` take
+    the prompt K/V and ``pos`` becomes ``lengths``. Inactive rows' caches
+    pass through bit-unchanged — in-flight decode state in other slots is
+    never disturbed, which is what lets prefill interleave with decode.
+    Returns (logits (B, V) at each row's LAST prompt token — i.e. the first
+    generated token's distribution — and the merged caches).
+
+    Pad positions ``t >= len`` are written to ring slots the validity mask
+    keeps unreadable (their ``ki`` exceeds the row's ``pos``), so padding
+    never leaks into later decode; MoE rows may drop differently per bucket
+    length, so admission must bucket by prompt length deterministically.
+    """
+    # run every row from position zero; rows not being admitted compute
+    # garbage that the merge below discards
+    zeroed = tuple(
+        ({**c, "pos": jnp.zeros_like(c["pos"])}
+         if isinstance(c, dict) and "pos" in c else c)
+        for c in caches)
+    x, _ = embed_inputs(params, cfg, inputs)
+    x, _, new_caches = _run_stack(params["layers"], cfg.pattern, cfg, x,
+                                  None, None, zeroed)
+    x = L.rmsnorm(params["final_norm"], x)
+    idx = jnp.clip(lengths - 1, 0)[:, None, None]
+    last = jnp.take_along_axis(x, jnp.broadcast_to(
+        idx, (x.shape[0], 1, x.shape[2])), axis=1)
+    logits = unembed(params, cfg, last)[:, 0].astype(jnp.float32)
+
+    def merge(new, old):
+        if new.ndim < 2:
+            return new
+        m = active.reshape((1, -1) + (1,) * (new.ndim - 2))
+        return jnp.where(m, new, old)
+
+    merged = []
+    for new_c, old_c in zip(new_caches, caches):
+        if isinstance(new_c, dict) and "pos" in new_c:
+            pos = jnp.where(active[None], lengths[None], old_c["pos"])
+            merged.append({**jax.tree.map(merge, {k: new_c[k] for k in new_c
+                                                  if k != "pos"},
+                                          {k: old_c[k] for k in old_c
+                                           if k != "pos"}),
+                           "pos": pos})
+        else:
+            merged.append(jax.tree.map(merge, new_c, old_c))
+    return logits, tuple(merged)

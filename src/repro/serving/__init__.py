@@ -1,0 +1,25 @@
+"""Continuous-batching serving on the latency-bound dual-root tree.
+
+Layer map (see docs/serving.md for the request lifecycle and DESIGN.md for
+the dataflow diagram):
+
+  request.py    — Request objects + lifecycle (QUEUED -> ACTIVE -> DONE)
+  scheduler.py  — FIFO admission into KV-cache slots (+ the static policy)
+  engine.py     — the engine loop over the slot-aware prefill/decode steps
+  telemetry.py  — per-tick stats, cross-replica b=1 dual-root reduction
+  fleet.py      — replica heartbeats -> re-queue + plan_remesh on death
+"""
+
+from repro.serving.engine import ServingEngine
+from repro.serving.fleet import FailoverPlan, ReplicaFleet
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import SlotScheduler
+from repro.serving.telemetry import (STATS_COLLECTIVE, STATS_FIELDS,
+                                     StepStats, TelemetryLog,
+                                     make_stats_reducer)
+
+__all__ = [
+    "ServingEngine", "Request", "RequestState", "SlotScheduler",
+    "ReplicaFleet", "FailoverPlan", "TelemetryLog", "StepStats",
+    "make_stats_reducer", "STATS_FIELDS", "STATS_COLLECTIVE",
+]

@@ -1,0 +1,100 @@
+"""Replica fleet supervision: heartbeats feed the admission scheduler.
+
+A serving deployment runs N data-parallel replicas, each an independent
+:class:`~repro.serving.engine.ServingEngine` behind a shared dispatcher.
+This module is the dispatcher's control plane, built on the training
+stack's fault-tolerance runtime:
+
+* each replica heartbeats a :class:`~repro.runtime.fault_tolerance
+  .HeartbeatMonitor` (transport-injectable, so tests kill replicas with a
+  fake clock);
+* when a replica misses its deadline, its queued AND in-flight requests are
+  re-queued at the *front* of a survivor's scheduler (generation restarts
+  from the prompt — slots are device state and died with the replica);
+* the stats-reduction topology is re-planned over the survivors via
+  :func:`~repro.runtime.fault_tolerance.plan_remesh` — the b=1 dual-root
+  tree re-forms over any surviving subset, so the telemetry collective
+  never blocks on a dead rank.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+from repro.core import cost_model as cm
+from repro.runtime.fault_tolerance import (ElasticPlan, HeartbeatMonitor,
+                                           HostFailure, plan_remesh)
+from repro.serving.scheduler import SlotScheduler
+from repro.serving.telemetry import STATS_FIELDS
+
+
+@dataclasses.dataclass(frozen=True)
+class FailoverPlan:
+    """What a replica death changes: who is gone, what work moved, and the
+    re-planned stats-reduction topology for the survivors."""
+    dead: int
+    survivors: tuple
+    requeued: tuple            # request ids moved back to the queue front
+    elastic: ElasticPlan
+
+
+class ReplicaFleet:
+    """Tracks request placement across replicas and fails work over."""
+
+    def __init__(self, n_replicas: int, *, timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic,
+                 comm_model: cm.CommModel = cm.TPU_V5E):
+        if n_replicas < 2:
+            raise ValueError("a fleet needs at least two replicas")
+        self.monitor = HeartbeatMonitor(n_replicas, timeout_s, clock)
+        self.comm_model = comm_model
+        self._alive = list(range(n_replicas))
+        self._placement: dict = {r: [] for r in self._alive}
+
+    @property
+    def alive(self) -> tuple:
+        return tuple(self._alive)
+
+    def beat(self, replica: int) -> None:
+        self.monitor.beat(replica)
+
+    # ------------------------------------------------------------ placement
+    def assign(self, req) -> int:
+        """Least-loaded placement; returns the chosen replica."""
+        replica = min(self._alive, key=lambda r: len(self._placement[r]))
+        self._placement[replica].append(req)
+        return replica
+
+    def complete(self, replica: int, req) -> None:
+        self._placement[replica].remove(req)
+
+    # ------------------------------------------------------------ failover
+    def poll(self, scheduler: SlotScheduler) -> FailoverPlan | None:
+        """Check heartbeats; on a death, re-queue the dead replica's work
+        into ``scheduler`` (a survivor's) and re-plan the stats collective.
+
+        Returns the :class:`FailoverPlan`, or None while everyone is alive.
+        Never raises on failure — serving degrades, it does not stop.
+        """
+        try:
+            self.monitor.check()
+            return None
+        except HostFailure as f:
+            dead = f.host
+            self.monitor.drop(dead)
+            self._alive.remove(dead)
+            orphans = self._placement.pop(dead)
+            # dead replica's engine state is gone: evict any slot bookkeeping
+            # and restart the requests from their prompts, ahead of the line
+            scheduler.requeue_front(orphans)
+            for req in orphans:
+                target = min(self._alive,
+                             key=lambda r: len(self._placement[r]))
+                self._placement[target].append(req)
+            stats_bytes = float(len(STATS_FIELDS) * 4)
+            plan = plan_remesh(tuple(self._alive), stats_bytes,
+                               self.comm_model)
+            return FailoverPlan(dead, tuple(self._alive),
+                                tuple(r.rid for r in orphans), plan)

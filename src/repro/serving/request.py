@@ -1,0 +1,65 @@
+"""Request objects and their lifecycle for the serving engine.
+
+A request is born QUEUED, becomes ACTIVE when the admission scheduler packs
+it into a KV-cache slot (its prompt is prefilled and its first token emitted
+in the same call), and becomes DONE when it has generated
+``max_new_tokens``. Timestamps are recorded in both clocks the engine runs:
+*ticks* (the virtual scheduling clock — one engine iteration per tick, which
+is what arrival staggering and TTFT/latency are measured in, deterministic
+across runs) and wall seconds (what throughput is measured in).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"      # submitted, waiting for a slot (or not yet arrived)
+    ACTIVE = "active"      # occupies a slot; prefilled, decoding
+    DONE = "done"          # generated max_new_tokens; slot released
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``prompt`` is a tuple of token ids; ``arrival`` is the tick at which the
+    request becomes admissible (requests submitted ahead of time stay
+    invisible to the scheduler until then — the staggered-arrival workload).
+    """
+
+    rid: int
+    prompt: tuple
+    max_new_tokens: int
+    arrival: int = 0
+
+    # runtime fields, owned by the scheduler/engine
+    state: RequestState = RequestState.QUEUED
+    slot: int | None = None
+    tokens: list = dataclasses.field(default_factory=list)  # generated ids
+    t_admit: int | None = None       # tick the slot was granted
+    t_first: int | None = None       # tick the first token was emitted
+    t_done: int | None = None        # tick generation completed
+
+    def __post_init__(self):
+        self.prompt = tuple(int(t) for t in self.prompt)
+        if not self.prompt:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens must be >=1")
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.max_new_tokens
+
+    @property
+    def ttft(self) -> int | None:
+        """Time-to-first-token in ticks (admission wait + prefill)."""
+        return None if self.t_first is None else self.t_first - self.arrival
+
+    @property
+    def latency(self) -> int | None:
+        """End-to-end latency in ticks."""
+        return None if self.t_done is None else self.t_done - self.arrival

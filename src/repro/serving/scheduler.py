@@ -1,0 +1,129 @@
+"""Admission scheduling: pack queued requests into KV-cache slots.
+
+The scheduler owns the queue and the slot table; the engine owns the device
+caches. Invariants (tested in tests/test_serving.py):
+
+* **no double-booking** — a slot holds at most one ACTIVE request, and a
+  request at most one slot;
+* **FIFO fairness** — requests are admitted strictly in queue order: a
+  request that has not arrived yet blocks everything behind it (no
+  skip-ahead, so a long-prompt request cannot starve);
+* **freed-slot reuse** — releasing a slot makes it immediately admissible
+  again, with no device-side reallocation (the per-slot ``pos`` reset in
+  the cache is what makes reuse safe without re-jitting).
+
+The ``batch_sync`` admission mode is the classic static-batching policy the
+benchmark compares against: wait until the *next whole batch* of requests
+has arrived AND every slot is free, then admit all of them at once.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+
+from repro.serving.request import Request, RequestState
+
+
+class SlotScheduler:
+    """Queue + slot table for one serving replica."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.n_slots = n_slots
+        self._queue: deque = deque()
+        self._slots: list = [None] * n_slots     # slot -> Request | None
+        self._finished: list = []
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: Request) -> None:
+        if req.state is not RequestState.QUEUED:
+            raise ValueError(f"request {req.rid} is {req.state}, not QUEUED")
+        self._queue.append(req)
+
+    def requeue_front(self, reqs) -> None:
+        """Push failed-over requests at the FRONT of the queue (fleet
+        failover: a dead replica's work must not lose its place in line).
+        Their generation restarts from the prompt — slots are request-local
+        state, and the dead replica's cache rows died with it."""
+        for req in reversed(list(reqs)):
+            req.state = RequestState.QUEUED
+            req.slot = None
+            req.tokens = []
+            req.t_admit = req.t_first = req.t_done = None
+            self._queue.appendleft(req)
+
+    # ------------------------------------------------------------ queries
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    @property
+    def free_slots(self) -> list:
+        return [i for i, r in enumerate(self._slots) if r is None]
+
+    @property
+    def active(self) -> dict:
+        """slot -> Request for every occupied slot."""
+        return {i: r for i, r in enumerate(self._slots) if r is not None}
+
+    @property
+    def finished(self) -> list:
+        return list(self._finished)
+
+    @property
+    def pending(self) -> bool:
+        return bool(self._queue)
+
+    def arrived_depth(self, now: int) -> int:
+        """Queued requests that have arrived by ``now`` (telemetry's queue
+        depth: work that is actually waiting, not future arrivals)."""
+        return sum(1 for r in self._queue if r.arrival <= now)
+
+    # ------------------------------------------------------------ admission
+    def admit(self, now: int, batch_sync: bool = False) -> list:
+        """Grant free slots to arrived requests; returns [(slot, request)].
+
+        FIFO: only the queue head is ever considered. ``batch_sync`` is the
+        static-batching policy (see module docstring).
+        """
+        if batch_sync:
+            if len(self.free_slots) < self.n_slots:
+                return []                     # a batch in flight: wait it out
+            k = min(self.n_slots, len(self._queue))
+            if k == 0 or any(self._queue[i].arrival > now for i in range(k)):
+                return []                     # wait for the full batch
+        out = []
+        free = deque(self.free_slots)
+        while free and self._queue and self._queue[0].arrival <= now:
+            req = self._queue.popleft()
+            slot = free.popleft()
+            assert self._slots[slot] is None, "slot double-booked"
+            assert req.slot is None, f"request {req.rid} already has a slot"
+            req.state = RequestState.ACTIVE
+            req.slot = slot
+            req.t_admit = now
+            self._slots[slot] = req
+            out.append((slot, req))
+        return out
+
+    # ------------------------------------------------------------ release
+    def release(self, slot: int, now: int) -> Request:
+        req = self._slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is already free")
+        req.state = RequestState.DONE
+        req.t_done = now
+        req.slot = None
+        self._slots[slot] = None
+        self._finished.append(req)
+        return req
+
+    def drain_active(self) -> list:
+        """Evict every in-flight request (replica failover): clear the slot
+        table and return the requests for re-queueing elsewhere."""
+        out = [r for r in self._slots if r is not None]
+        self._slots = [None] * self.n_slots
+        for r in out:
+            r.slot = None
+        return out

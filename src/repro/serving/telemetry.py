@@ -1,0 +1,127 @@
+"""Per-step serving telemetry, reduced across replicas with the b=1 tree.
+
+Each engine tick produces a small stats vector (queue depth, busy slots,
+tokens emitted, prefills). In a data-parallel serving fleet every replica
+needs the *global* view of these to make admission and autoscaling
+decisions, and the payload is a handful of floats — exactly the b=1
+(single-block) latency-bound regime where the paper's dual-root tree beats
+a ring by ``O(p / log p)`` (see docs/serving.md for the cost-model numbers).
+
+``make_stats_reducer`` therefore pins ``num_blocks=1`` and leaves the
+algorithm choice to ``method="auto"``: a single-pod replica mesh resolves to
+the flat dual-root tree from the α-β switch, while a multi-node mesh whose
+autotune cache (PR 1/2's warm-up loop) recorded a ``hier`` winner replays
+the hierarchical composition automatically — the serving path never hand
+picks a collective.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.collectives import CollectiveConfig, all_reduce
+
+# field order of the per-tick stats vector (summed across replicas)
+STATS_FIELDS = ("queue_depth", "active_slots", "new_tokens", "prefills")
+
+# b=1: latency-bound single-block pipeline; "auto": measured autotuner hit
+# if one exists for this (p, nbytes, dtype, fabric), else the cost-model
+# switch — multi-node meshes with a tuned 'hier' entry pick it up here.
+STATS_COLLECTIVE = CollectiveConfig(method="auto", num_blocks=1)
+
+
+def make_stats_reducer(mesh, axis: str = "data",
+                       collective: CollectiveConfig = STATS_COLLECTIVE):
+    """Build ``reduce(rows) -> summed (k,)`` over the ``axis`` replicas.
+
+    ``rows`` is either a stacked ``(p, k)`` matrix — one stats row per
+    replica, the fleet simulation where the single controller holds every
+    replica's counters — or a single ``(k,)``/``(1, k)`` row, the shape one
+    :class:`~repro.serving.engine.ServingEngine` produces per tick. A
+    single row is broadcast to all ``p`` ranks before the collective (in a
+    single-controller run one engine stands in for every replica; a real
+    multi-process deployment feeds its own local row per process). Either
+    way the rows are summed with the configured collective inside a
+    shard_map manual over ``axis``. A 1-sized (or absent) axis returns a
+    plain host-side sum — the CPU 1x1 engine pays zero overhead.
+    """
+    p = dict(getattr(mesh, "shape", {})).get(axis, 1) if mesh is not None \
+        else 1
+    if p <= 1:
+        return lambda rows: np.asarray(rows, np.float32).reshape(
+            -1, np.shape(rows)[-1]).sum(0)
+
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    fn = jax.jit(compat.shard_map(
+        lambda v: all_reduce(v.reshape(-1), axis, p, collective),
+        mesh=mesh, in_specs=P(axis), out_specs=P(),
+        axis_names={axis}, check_vma=False))
+
+    def reduce(rows):
+        arr = np.atleast_2d(np.asarray(rows, np.float32))
+        if arr.shape[0] == 1:
+            arr = np.tile(arr, (p, 1))
+        if arr.shape[0] != p:
+            raise ValueError(
+                f"stats rows {arr.shape} do not match the {p}-way "
+                f"'{axis}' replica axis (want 1 or {p} rows)")
+        return np.asarray(fn(arr))
+
+    return reduce
+
+
+@dataclasses.dataclass(frozen=True)
+class StepStats:
+    """One engine tick's (cross-replica-summed) counters."""
+    tick: int
+    queue_depth: float
+    active_slots: float
+    new_tokens: float
+    prefills: float
+
+
+class TelemetryLog:
+    """Collects per-tick stats and summarizes a finished run."""
+
+    def __init__(self, reducer=None):
+        self._reduce = reducer or (
+            lambda stacked: np.asarray(stacked, np.float32).sum(0))
+        self.steps: list = []
+
+    def step(self, tick: int, local_vec) -> StepStats:
+        """Record one tick. ``local_vec`` is this replica's row (k,) or a
+        stacked (p, k) matrix of every replica's row (fleet simulation)."""
+        vec = np.atleast_2d(np.asarray(local_vec, np.float32))
+        red = self._reduce(vec)
+        s = StepStats(tick, *(float(x) for x in red[:len(STATS_FIELDS)]))
+        self.steps.append(s)
+        return s
+
+    def report(self, finished, wall_s: float, ticks: int) -> dict:
+        """Aggregate a run. ``finished``: completed Request objects."""
+        toks = [len(r.tokens) for r in finished]
+        ttfts = [r.ttft for r in finished if r.ttft is not None]
+        lats = [r.latency for r in finished if r.latency is not None]
+
+        def pct(xs, q):
+            return float(np.percentile(xs, q)) if xs else float("nan")
+
+        total = int(sum(toks))
+        return {
+            "requests": len(finished),
+            "total_tokens": total,
+            "wall_s": float(wall_s),
+            "tok_s": total / wall_s if wall_s > 0 else float("nan"),
+            "ticks": int(ticks),
+            "ttft_ticks_mean": float(np.mean(ttfts)) if ttfts else float("nan"),
+            "ttft_ticks_p50": pct(ttfts, 50),
+            "latency_ticks_p50": pct(lats, 50),
+            "latency_ticks_p95": pct(lats, 95),
+            "steps": list(self.steps),
+        }

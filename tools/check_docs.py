@@ -1,13 +1,15 @@
 """Execute every ```python code block in the documentation.
 
-Part of ``make verify``: README.md and docs/*.md promise runnable examples,
-so this script extracts each fenced ```python block and executes it. Blocks
-within one file share a namespace (later blocks may use earlier imports) and
-execute in order; files are independent. Non-python fences (```bash,
-```text, ...) are skipped — use them for anything not meant to run.
+Part of ``make verify``: README.md, DESIGN.md, and docs/*.md promise
+runnable examples, so this script extracts each fenced ```python block and
+executes it. The page list is a glob, not a hard-coded list — a new
+docs/*.md page is gated the moment it exists. Blocks within one file share
+a namespace (later blocks may use earlier imports) and execute in order;
+files are independent. Non-python fences (```bash, ```text, ...) are
+skipped — use them for anything not meant to run.
 
 Usage:  PYTHONPATH=src python tools/check_docs.py [files...]
-        (no args: README.md + docs/*.md from the repo root)
+        (no args: README.md + DESIGN.md + docs/*.md from the repo root)
 """
 
 from __future__ import annotations
@@ -22,7 +24,7 @@ FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
 
 
 def doc_files(root: str) -> list:
-    out = [os.path.join(root, "README.md")]
+    out = [os.path.join(root, "README.md"), os.path.join(root, "DESIGN.md")]
     out += sorted(glob.glob(os.path.join(root, "docs", "*.md")))
     return [f for f in out if os.path.exists(f)]
 
