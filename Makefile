@@ -3,7 +3,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test docs-check bench bench-collectives bench-serving
+.PHONY: verify test docs-check docs-links bench bench-collectives \
+	bench-serving
 
 verify:
 	$(PY) -m pytest -x -q
@@ -11,6 +12,10 @@ verify:
 
 docs-check:
 	$(PY) tools/check_docs.py
+
+# fast link-integrity pass only (dangling [x](path) / "FILE.md §id" refs)
+docs-links:
+	$(PY) tools/check_docs.py --links-only
 
 test: verify
 

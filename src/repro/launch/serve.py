@@ -1,12 +1,20 @@
 """Serving driver: continuous-batching engine or the legacy fixed-batch loop.
 
 Continuous batching (the default path for real traffic — see
-docs/serving.md): a staggered-arrival workload through the slot scheduler,
-prefill interleaved with in-flight decode, per-step stats reduced with the
-b=1 dual-root tree:
+docs/serving.md and docs/sampling_and_prefill.md): a staggered-arrival
+workload through the slot scheduler, prefill interleaved with in-flight
+decode, per-step stats reduced with the b=1 dual-root tree:
 
   PYTHONPATH=src python -m repro.launch.serve --arch minicpm_2b --reduced \
       --continuous --requests 8 --slots 4 --arrival-gap 2
+
+Any token-prompt decoder qualifies, including the recurrent-state mixers —
+e.g. RWKV6 with prompts longer than the prefill chunk (streamed in chunk
+per tick) and seeded nucleus sampling:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6_7b --reduced \
+      --continuous --requests 6 --slots 3 --prompt-len 20 80 \
+      --prefill-chunk 16 --temperature 0.9 --top-p 0.85
 
 Legacy fixed-batch demo (every row decodes in lockstep from an empty cache):
 
@@ -30,8 +38,16 @@ from repro.models import transformer as tf
 
 
 def synthetic_workload(n: int, vocab: int, *, gap: int = 2, seed: int = 0,
-                       prompt_lens=(3, 12), max_new=(4, 24)) -> list:
-    """Deterministic staggered-arrival request stream (bench + CLI)."""
+                       prompt_lens=(3, 12), max_new=(4, 24),
+                       sampling=None) -> list:
+    """Deterministic staggered-arrival request stream (bench + CLI).
+
+    ``sampling`` is a base :class:`~repro.serving.sampling.SamplingParams`
+    or None (greedy). Each request gets its own seed (``base seed + rid``)
+    so streams differ per request but reproduce run-to-run.
+    """
+    import dataclasses as _dc
+
     from repro.serving import Request
     rng = np.random.default_rng(seed)
     return [
@@ -40,14 +56,17 @@ def synthetic_workload(n: int, vocab: int, *, gap: int = 2, seed: int = 0,
                     1, vocab, int(rng.integers(prompt_lens[0],
                                                prompt_lens[1] + 1)))),
                 max_new_tokens=int(rng.integers(max_new[0], max_new[1] + 1)),
-                arrival=i * gap)
+                arrival=i * gap,
+                sampling=(None if sampling is None else
+                          _dc.replace(sampling, seed=sampling.seed + i)))
         for i in range(n)
     ]
 
 
 def serve_continuous(args):
     """Drive the continuous-batching engine on a synthetic workload."""
-    from repro.serving import ServingEngine, make_stats_reducer
+    from repro.serving import SamplingParams, ServingEngine, \
+        make_stats_reducer
     mesh_shape = tuple(int(x) for x in args.mesh.split("x"))
     axes = ("data", "model")[-len(mesh_shape):]
     mesh = make_mesh(mesh_shape, axes)
@@ -58,12 +77,23 @@ def serve_continuous(args):
     # (host-side sum on a 1-wide axis)
     engine = ServingEngine(cfg, pcfg, mesh, params, n_slots=args.slots,
                            max_len=args.cache_len,
+                           prefill_chunk=args.prefill_chunk,
                            stats_reducer=make_stats_reducer(mesh))
+    sampling = None
+    if args.temperature > 0:
+        sampling = SamplingParams(temperature=args.temperature,
+                                  top_k=args.top_k, top_p=args.top_p,
+                                  seed=args.sample_seed)
     reqs = synthetic_workload(args.requests, cfg.vocab_size,
-                              gap=args.arrival_gap, seed=args.seed + 1)
+                              gap=args.arrival_gap, seed=args.seed + 1,
+                              prompt_lens=tuple(args.prompt_len),
+                              sampling=sampling)
     report = engine.run(reqs, static=args.static)
     print(f"[{report['mode']}] {report['requests']} requests, "
-          f"{report['total_tokens']} tokens in {report['wall_s']:.2f}s "
+          f"{report['total_tokens']} tokens "
+          f"({report['sampled_tokens']} sampled, "
+          f"{report['prefill_chunks']} prefill chunks) "
+          f"in {report['wall_s']:.2f}s "
           f"({report['tok_s']:.1f} tok/s, {report['ticks']} ticks, "
           f"ttft p50 {report['ttft_ticks_p50']:.1f} ticks, "
           f"latency p95 {report['latency_ticks_p95']:.1f} ticks)")
@@ -137,6 +167,25 @@ def main(argv=None):
                     help="continuous mode: KV-cache slots (concurrency)")
     ap.add_argument("--arrival-gap", type=int, default=2,
                     help="continuous mode: ticks between request arrivals")
+    ap.add_argument("--prompt-len", type=int, nargs=2, default=(3, 12),
+                    metavar=("MIN", "MAX"),
+                    help="continuous mode: synthetic prompt length range "
+                         "(prompts longer than --prefill-chunk stream in "
+                         "chunk per tick)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="continuous mode: max prompt tokens per prefill "
+                         "call (default: the largest single call the cache "
+                         "geometry allows)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="continuous mode: sampling temperature "
+                         "(0 = greedy, the bit-exact default)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="continuous mode: top-k filter (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="continuous mode: nucleus (top-p) filter (1 = off)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="continuous mode: base sampler seed (request i "
+                         "uses seed+i; streams reproduce run-to-run)")
     args = ap.parse_args(argv)
     if args.continuous or args.static:
         return serve_continuous(args)

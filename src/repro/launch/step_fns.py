@@ -244,44 +244,96 @@ def make_prefill_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
       (the dry-run's serving prefill proxy; see EXPERIMENTS.md §Dry-run for
       the KV-cache-materialization caveat). step(params, inputs) -> logits.
     * ``into_slots=True`` — the serving engine's cache-writing prefill:
-      step(params, tokens (1, Tc), caches, slot (), length ()) ->
-      (first-token logits (V,), caches). The prompt runs through the stack
-      as a SINGLE row against a fresh zero cache — prefill cost scales with
-      the admitted request, not with ``n_slots`` — and the finished row is
-      spliced into the slot with one dynamic-update per cache leaf, leaving
-      every in-flight slot untouched (admission interleaves with decode).
-      One compilation per prompt bucket length Tc; ``slot`` is traced, so
-      slot churn never re-jits.
+      step(params, tokens (1, Tc), caches, slot (), length (), resume=bool,
+      sampling_row={key (2,), temperature (), top_k (), top_p ()}) ->
+      (first-token (), caches). The prompt CHUNK runs through the stack as
+      a SINGLE row — prefill cost scales with the admitted chunk, not with
+      ``n_slots`` — and the finished row is spliced into the slot with one
+      dynamic-update per cache leaf, leaving every in-flight slot untouched
+      (admission interleaves with decode). ``resume=False`` starts the row
+      from a fresh zero cache (first chunk); ``resume=True`` extracts the
+      slot's CURRENT row and continues it (chunks 2..n of a long prompt:
+      attention keeps writing the ring at the carried ``pos``, SSM carries
+      advance from the checkpointed state). The emitted token is the
+      sampled first generated token — meaningful on the FINAL chunk, where
+      the engine consumes it (greedy rows are a bit-exact argmax; the
+      sampled path derives its key from the request seed at step 0, see
+      repro.serving.sampling). One compilation per (bucket Tc, resume)
+      pair; ``slot`` is traced, so slot churn never re-jits.
     """
     pspecs = (fsdp_pspecs(cfg, mesh) if pcfg.dp_mode == "fsdp"
               else model_pspecs(cfg, mesh))
     dp = _dp_axes(mesh)
 
     if into_slots:
+        from repro.serving.sampling import sample_tokens
         cspecs = cache_pspecs(cfg, mesh, suite.global_batch, suite.seq_len,
                               per_slot=True)
 
-        def slot_body(params, tokens, caches, slot, length):
+        def _prefill_fwd(params, tokens, caches, slot, length, resume):
             from repro.models.layers import mesh_ctx
             with mesh_ctx(mesh):
-                row0 = tf.init_cache(cfg, 1, suite.seq_len, per_slot=True)
+                if resume:
+                    row_in = jax.tree.map(
+                        lambda full: jax.lax.dynamic_slice_in_dim(
+                            full, slot, 1, axis=1), caches)
+                else:
+                    row_in = tf.init_cache(cfg, 1, suite.seq_len,
+                                           per_slot=True)
                 logits, row = tf.prefill_step(
-                    params, cfg, {"tokens": tokens}, row0,
-                    length.reshape(1), jnp.ones((1,), bool))
+                    params, cfg, {"tokens": tokens}, row_in,
+                    length.reshape(1), jnp.ones((1,), bool), resume=resume)
 
             def ins(full, r):
                 return jax.lax.dynamic_update_slice_in_dim(
                     full, r.astype(full.dtype), slot, axis=1)
 
-            return logits[0], jax.tree.map(ins, caches, row)
+            return logits, jax.tree.map(ins, caches, row)
 
-        step = jax.jit(
-            slot_body,
-            in_shardings=(_named(mesh, pspecs), None, _named(mesh, cspecs),
-                          None, None),
-            out_shardings=(NamedSharding(mesh, P(None)),
-                           _named(mesh, cspecs)),
-            donate_argnums=(2,))
+        def greedy_body(params, tokens, caches, slot, length, resume):
+            logits, out = _prefill_fwd(params, tokens, caches, slot, length,
+                                       resume)
+            return jnp.argmax(logits).astype(jnp.int32), out
+
+        def sampled_body(params, tokens, caches, slot, length, sampling_row,
+                         resume):
+            logits, out = _prefill_fwd(params, tokens, caches, slot, length,
+                                       resume)
+            tok = sample_tokens(
+                logits.reshape(1, -1), sampling_row["key"][None],
+                jnp.zeros((1,), jnp.int32),            # first token: step 0
+                sampling_row["temperature"].reshape(1),
+                sampling_row["top_k"].reshape(1),
+                sampling_row["top_p"].reshape(1))[0]
+            return tok, out
+
+        # greedy (the default) compiles without the sampler pipeline;
+        # sampled variants compile lazily on first sampled admission
+        jitted = {}
+        for resume in (False, True):
+            jitted[resume, False] = jax.jit(
+                functools.partial(greedy_body, resume=resume),
+                in_shardings=(_named(mesh, pspecs), None,
+                              _named(mesh, cspecs), None, None),
+                out_shardings=(NamedSharding(mesh, P()),
+                               _named(mesh, cspecs)),
+                donate_argnums=(2,))
+            jitted[resume, True] = jax.jit(
+                functools.partial(sampled_body, resume=resume),
+                in_shardings=(_named(mesh, pspecs), None,
+                              _named(mesh, cspecs), None, None, None),
+                out_shardings=(NamedSharding(mesh, P()),
+                               _named(mesh, cspecs)),
+                donate_argnums=(2,))
+
+        def step(params, tokens, caches, slot, length, *, resume=False,
+                 sampling_row=None):
+            if sampling_row is None:                  # greedy default
+                return jitted[bool(resume), False](params, tokens, caches,
+                                                   slot, length)
+            return jitted[bool(resume), True](params, tokens, caches, slot,
+                                              length, sampling_row)
+
         return step, {"params": pspecs, "cache": cspecs}
 
     def body(params, inputs):
@@ -337,11 +389,17 @@ def make_serve_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
     ``slots=False``: step(params, inputs, caches) -> (logits, new_caches) —
     the fixed-batch decode step (every row advances every call).
 
-    ``slots=True``: step(params, inputs, caches, active) -> (logits,
-    new_caches) against per-slot caches (``pos`` per batch row). ``active``
-    (B,) bool marks rows holding in-flight requests; inactive rows compute
-    but do not advance, so one compiled step serves any mix of busy/free
-    slots — the continuous-batching engine's decode tick.
+    ``slots=True``: step(params, inputs, caches, active, sampling) ->
+    (tokens (B,), new_caches) against per-slot caches (``pos`` per batch
+    row; SSM rows carry their recurrent state). ``active`` (B,) bool marks
+    rows holding in-flight requests; inactive rows compute but neither
+    advance nor mutate their cache rows (the decode step merges them back),
+    so one compiled step serves any mix of busy/free/prefilling slots — the
+    continuous-batching engine's decode tick. ``sampling`` threads the
+    per-request seeded sampler through the jitted step: {key (B,2) u32,
+    step (B,) i32, temperature (B,), top_k (B,), top_p (B,)}; rows with
+    temperature 0 take the bit-exact greedy argmax
+    (see repro.serving.sampling).
     """
     pspecs = (fsdp_pspecs(cfg, mesh) if pcfg.dp_mode == "fsdp"
               else model_pspecs(cfg, mesh))
@@ -355,19 +413,47 @@ def make_serve_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
         if shard_batch else P(None)
 
     if slots:
-        def slot_body(params, inputs, caches, active):
+        from repro.serving.sampling import sample_tokens
+
+        def greedy_body(params, inputs, caches, active):
             from repro.models.layers import mesh_ctx
             with mesh_ctx(mesh):
                 logits, new_caches = tf.decode_step(params, cfg, inputs,
                                                     caches, active=active)
-            return logits, new_caches
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_caches
 
-        step = jax.jit(
-            slot_body,
+        def sampled_body(params, inputs, caches, active, sampling):
+            from repro.models.layers import mesh_ctx
+            with mesh_ctx(mesh):
+                logits, new_caches = tf.decode_step(params, cfg, inputs,
+                                                    caches, active=active)
+            tokens = sample_tokens(logits, sampling["key"], sampling["step"],
+                                   sampling["temperature"],
+                                   sampling["top_k"], sampling["top_p"])
+            return tokens, new_caches
+
+        # all-greedy ticks (the default and the bench path) keep the hot
+        # decode step at a plain argmax — the full-vocab sort/softmax of
+        # the sampler pipeline compiles only into the sampled variant,
+        # whose greedy rows still take the identical argmax inside
+        # sample_tokens, so mixing policies never changes greedy streams
+        out_sh = (NamedSharding(mesh, bspec), _named(mesh, cspecs))
+        greedy_step = jax.jit(
+            greedy_body,
             in_shardings=(_named(mesh, pspecs), None, _named(mesh, cspecs),
                           None),
-            out_shardings=(NamedSharding(mesh, bspec), _named(mesh, cspecs)),
-            donate_argnums=(2,))
+            out_shardings=out_sh, donate_argnums=(2,))
+        sampled_step = jax.jit(
+            sampled_body,
+            in_shardings=(_named(mesh, pspecs), None, _named(mesh, cspecs),
+                          None, None),
+            out_shardings=out_sh, donate_argnums=(2,))
+
+        def step(params, inputs, caches, active, sampling=None):
+            if sampling is None:
+                return greedy_step(params, inputs, caches, active)
+            return sampled_step(params, inputs, caches, active, sampling)
+
         return step, {"params": pspecs, "cache": cspecs, "batch": bspec}
 
     def body(params, inputs, caches):

@@ -434,7 +434,8 @@ def attention_decode(p: Params, cfg: AttnConfig, x: jax.Array,
 
 
 def attention_decode_slots(p: Params, cfg: AttnConfig, x: jax.Array,
-                           cache: Params, cache_pos: jax.Array):
+                           cache: Params, cache_pos: jax.Array,
+                           lengths: jax.Array | None = None):
     """Decode/prefill against a ring KV cache with PER-ROW positions.
 
     The continuous-batching serving engine packs independent requests into
@@ -446,7 +447,19 @@ def attention_decode_slots(p: Params, cfg: AttnConfig, x: jax.Array,
     for slot prefill; cache_pos: (B,) int32 — tokens already cached per row.
     Token t of row b is written at ring slot ``(cache_pos[b] + t) % S`` and
     attends causally to absolute positions ``<= cache_pos[b] + t``. Requires
-    ``T <= S`` (otherwise one call would write a ring slot twice).
+    ``T <= S`` per CALL (otherwise one call would write a ring slot twice) —
+    not per prompt: chunked prefill feeds a long prompt through successive
+    calls that resume at the carried ``cache_pos``, writing the ring
+    contiguously across calls, so windowed/ring reads see exactly the same
+    (slot, position) layout a one-shot prefill would have produced.
+
+    ``lengths`` (B,) int32 — prefill only: tokens ``t >= lengths[b]`` are
+    bucket padding and their ring WRITES are suppressed (the old cache
+    value is written back). A fresh (pos=0) prefill could leave pads in
+    never-valid slots, but a RESUMED chunk's bucket can wrap the ring past
+    the row's earliest live position — an unsuppressed pad write there
+    would clobber real prompt K/V that position arithmetic still reads as
+    valid.
     Returns (out (B, T, d_model), new_cache_dict).
     """
     B, T, _ = x.shape
@@ -455,12 +468,21 @@ def attention_decode_slots(p: Params, cfg: AttnConfig, x: jax.Array,
     q, k, v = _qkv(p, cfg, x, positions)
     slots = jnp.mod(positions, S)                         # (B, T)
     brow = jnp.arange(B)[:, None]
+    tok_real = (None if lengths is None else
+                (jnp.arange(T, dtype=jnp.int32)[None] < lengths[:, None]))
 
     def write(arr, scale, val):
         if arr.dtype == jnp.int8:
             qv, sv = quantize_kv_rows(val)
+            if tok_real is not None:
+                m = tok_real[..., None, None]
+                qv = jnp.where(m, qv, arr[brow, slots])
+                sv = jnp.where(m, sv, scale[brow, slots])
             return arr.at[brow, slots].set(qv), scale.at[brow, slots].set(sv)
-        return arr.at[brow, slots].set(val.astype(arr.dtype)), scale
+        val = val.astype(arr.dtype)
+        if tok_real is not None:
+            val = jnp.where(tok_real[..., None, None], val, arr[brow, slots])
+        return arr.at[brow, slots].set(val), scale
 
     ck, ks = write(cache["k"], cache.get("ks"), k)
     cv, vs = write(cache["v"], cache.get("vs"), v)
@@ -470,9 +492,11 @@ def attention_decode_slots(p: Params, cfg: AttnConfig, x: jax.Array,
     cache_k = _cache_read(ck, ks, q.dtype)
     cache_v = _cache_read(cv, vs, q.dtype)
     # ring cache: after this call's writes the newest absolute position in
-    # row b is cache_pos[b] + T - 1; slot s holds last - ((last - s) mod S)
+    # row b is cache_pos[b] + T - 1 — or + lengths[b] - 1 when pad writes
+    # are suppressed; slot s holds last - ((last - s) mod S)
     # (negative -> never written for this request)
-    last = (cache_pos + T - 1)[:, None]                   # (B, 1)
+    newest = T if lengths is None else lengths[:, None]
+    last = cache_pos[:, None] + newest - 1                # (B, 1)
     ki = last - jnp.mod(last - jnp.arange(S)[None], S)    # (B, S)
     qpos = positions[..., None]                           # (B, T, 1)
     valid = (ki[:, None, :] >= 0) & (ki[:, None, :] <= qpos)

@@ -109,24 +109,35 @@ def _tmix_inputs(p: Params, x: jax.Array, shifted: jax.Array, cfg: RWKVConfig):
     return r, k, v, g, w_log
 
 
-def wkv_recurrent(r, k, v, w_log, u, state):
+def wkv_recurrent(r, k, v, w_log, u, state, valid=None):
     """Exact recurrence. r/k/v/w_log: (B,T,H,K); u: (H,K); state: (B,H,K,K).
 
     S_t = diag(w_t) S_{t-1} + k_t (x) v_t ;  o_t = r_t . (S_{t-1} + diag(u) k_t (x) v_t)
     Returns (o: (B,T,H,K), new_state).
+
+    ``valid`` (B, T) bool gates the state update per token: an invalid
+    (padding) step carries ``S_t = S_{t-1}`` through a ``where``, so right-pad
+    tokens leave the state BIT-unchanged — the invariant bucketed serving
+    prefill relies on (the pad outputs are still computed; callers discard
+    them). Because the carry is per-token either way, splitting a sequence
+    across calls (chunked prefill) reproduces the one-shot states exactly.
     """
     w = jnp.exp(w_log.astype(jnp.float32))
 
     def step(S, inp):
-        r_t, k_t, v_t, w_t = inp
+        r_t, k_t, v_t, w_t, m_t = inp
         kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
         o = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
-        S = w_t[..., None] * S + kv
+        S_new = w_t[..., None] * S + kv
+        S = jnp.where(m_t[:, None, None, None], S_new, S)
         return S, o
 
+    if valid is None:
+        valid = jnp.ones(r.shape[:2], bool)
     rs, ks_, vs, ws = (jnp.moveaxis(t.astype(jnp.float32), 1, 0)
                        for t in (r, k, v, w))
-    state, out = jax.lax.scan(step, state, (rs, ks_, vs, ws))
+    ms = jnp.moveaxis(valid, 1, 0)
+    state, out = jax.lax.scan(step, state, (rs, ks_, vs, ws, ms))
     return jnp.moveaxis(out, 0, 1).astype(r.dtype), state
 
 
@@ -176,11 +187,31 @@ def wkv_chunked(r, k, v, w_log, u, state, chunk: int):
     return out.astype(r.dtype), state
 
 
+def _checkpoint_row(seq: jax.Array, lengths: jax.Array | None) -> jax.Array:
+    """seq: (B, T, D). Returns (B, 1, D): token ``lengths-1`` per row — the
+    last REAL token — or the last token when ``lengths`` is None."""
+    if lengths is None:
+        return seq[:, -1:]
+    idx = jnp.clip(lengths - 1, 0)[:, None, None]
+    return jnp.take_along_axis(
+        seq, jnp.broadcast_to(idx, (seq.shape[0], 1, seq.shape[2])), axis=1)
+
+
 def rwkv_block(p: Params, x: jax.Array, cfg: RWKVConfig,
-               cache: Params | None = None, use_chunked: bool = True):
+               cache: Params | None = None, use_chunked: bool = True,
+               lengths: jax.Array | None = None):
     """Full RWKV6 block (time mix + channel mix) with optional decode cache.
 
     cache = {"shift1": (B,1,D), "shift2": (B,1,D), "state": (B,H,K,K)}.
+
+    ``lengths`` (B,) int32 activates the serving-prefill contract: the input
+    is right-padded to T, only tokens ``t < lengths[b]`` are real, and the
+    new cache checkpoints the recurrent state AT the true length — the WKV
+    state update is masked past ``lengths`` (pads leave it bit-unchanged)
+    and the token-shift carries are gathered at ``lengths-1`` instead of
+    ``T-1``. This path always runs the exact token recurrence (never the
+    chunkwise form), so splitting a prompt across successive calls with the
+    carried cache is bit-identical to one call over the whole prompt.
     """
     B, T, D = x.shape
     H, K = cfg.n_heads, cfg.head_dim
@@ -192,7 +223,10 @@ def rwkv_block(p: Params, x: jax.Array, cfg: RWKVConfig,
     state = (cache["state"] if cache else
              jnp.zeros((B, H, K, K), jnp.float32))
     u = tm["u"].astype(jnp.float32)
-    if T == 1 or not use_chunked or T % cfg.chunk_size != 0:
+    if lengths is not None:
+        valid = jnp.arange(T, dtype=jnp.int32)[None] < lengths[:, None]
+        o, state = wkv_recurrent(r, k, v, w_log, u, state, valid=valid)
+    elif T == 1 or not use_chunked or T % cfg.chunk_size != 0:
         o, state = wkv_recurrent(r, k, v, w_log, u, state)
     else:
         o, state = wkv_chunked(r, k, v, w_log, u, state, cfg.chunk_size)
@@ -209,7 +243,8 @@ def rwkv_block(p: Params, x: jax.Array, cfg: RWKVConfig,
         * (kk @ cm["wv"].astype(x.dtype))
     x = x + cout
 
-    new_cache = {"shift1": xn[:, -1:], "shift2": xn2[:, -1:], "state": state}
+    new_cache = {"shift1": _checkpoint_row(xn, lengths),
+                 "shift2": _checkpoint_row(xn2, lengths), "state": state}
     return x, new_cache
 
 
@@ -309,10 +344,45 @@ def mamba_scan_chunked(dt, dtx, Bc, C, A, state, chunk: int):
     return jnp.moveaxis(ys, 0, 1).reshape(B, T, Di), state
 
 
+def mamba_scan_recurrent(dt, dtx, Bc, C, A, state, valid=None):
+    """Exact token recurrence — op-for-op the T==1 decode step, scanned.
+
+    Used by serving prefill: because the carry is advanced one token at a
+    time with the same arithmetic as single-token decode, (a) splitting a
+    prompt across calls (chunked admission) reproduces the one-shot state
+    bit-exactly, and (b) ``valid`` (B, T) masks the state update behind a
+    ``where`` so right-pad tokens leave the carry bit-unchanged. The
+    chunkwise associative-scan form trades this exactness for MXU shape —
+    its reduction tree depends on T, so it stays the training/one-shot path.
+    """
+    def step(h, inp):
+        dt_t, dtx_t, b_t, c_t, m_t = inp
+        a0 = dt_t[:, :, None] * A[None]
+        b0 = dtx_t[:, :, None] * b_t[:, None, :]
+        h_new = jnp.exp(a0) * h + b0
+        h = jnp.where(m_t[:, None, None], h_new, h)
+        y = jnp.einsum("bdn,bn->bd", h_new, c_t)
+        return h, y
+
+    if valid is None:
+        valid = jnp.ones(dt.shape[:2], bool)
+    seq = tuple(jnp.moveaxis(t, 1, 0) for t in (dt, dtx, Bc, C, valid))
+    state, ys = jax.lax.scan(step, state, seq)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
 def mamba_block(p: Params, x: jax.Array, cfg: MambaConfig,
-                cache: Params | None = None):
+                cache: Params | None = None,
+                lengths: jax.Array | None = None):
     """Mamba block with optional decode cache
-    {"conv": (B, d_conv-1, Di), "ssm": (B, Di, N)}."""
+    {"conv": (B, d_conv-1, Di), "ssm": (B, Di, N)}.
+
+    ``lengths`` (B,) int32 is the serving-prefill contract (see
+    :func:`rwkv_block`): inputs are right-padded to T, the selective-scan
+    state update is masked past ``lengths`` and the scan runs the exact
+    token recurrence, and the depthwise-conv window is checkpointed at the
+    true length (``xcat[:, len:len+d_conv-1]``, not the padded tail).
+    """
     B, T, D = x.shape
     Di, N, Kc = cfg.d_inner, cfg.d_state, cfg.d_conv
     zx = x @ p["in_proj"].astype(x.dtype)
@@ -321,7 +391,15 @@ def mamba_block(p: Params, x: jax.Array, cfg: MambaConfig,
     prev = (cache["conv"] if cache else
             jnp.zeros((B, Kc - 1, Di), x.dtype))
     xcat = jnp.concatenate([prev.astype(x.dtype), xin], axis=1)
-    new_conv = xcat[:, -(Kc - 1):] if Kc > 1 else prev
+    if Kc <= 1:
+        new_conv = prev
+    elif lengths is None:
+        new_conv = xcat[:, -(Kc - 1):]
+    else:
+        # conv state after the true length: the Kc-1 inputs ENDING at token
+        # lengths-1 (xcat position lengths-1+Kc-1), i.e. window [len, len+Kc-1)
+        idx = lengths[:, None] + jnp.arange(Kc - 1, dtype=jnp.int32)[None]
+        new_conv = jnp.take_along_axis(xcat, idx[..., None], axis=1)
     w = p["conv_w"].astype(x.dtype)
     xc = sum(xcat[:, k:k + T] * w[k][None, None] for k in range(Kc))
     xc = jax.nn.silu(xc + p["conv_b"].astype(x.dtype))
@@ -329,7 +407,11 @@ def mamba_block(p: Params, x: jax.Array, cfg: MambaConfig,
     dt, dtx, Bc, Cc = _mamba_inner(p, xc, cfg)
     A = -jnp.exp(p["A_log"])                       # (Di,N), negative
     state = (cache["ssm"] if cache else jnp.zeros((B, Di, N), jnp.float32))
-    if T == 1:
+    if lengths is not None:
+        valid = jnp.arange(T, dtype=jnp.int32)[None] < lengths[:, None]
+        y, state = mamba_scan_recurrent(dt, dtx, Bc, Cc, A, state,
+                                        valid=valid)
+    elif T == 1:
         a0 = dt[:, 0, :, None] * A[None]
         b0 = dtx[:, 0, :, None] * Bc[:, 0, None, :]
         h = jnp.exp(a0) * state + b0

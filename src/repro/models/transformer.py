@@ -351,11 +351,21 @@ def _moe_dispatch(p, x, cfg: ModelConfig):
 # --------------------------------------------------------------------------
 
 def _apply_sub(sp: Params, s: SubSpec, cfg: ModelConfig, x, positions,
-               memory, cache):
-    """One sublayer; returns (x, aux_loss, new_cache)."""
+               memory, cache, lengths=None):
+    """One sublayer; returns (x, aux_loss, new_cache).
+
+    ``lengths`` (B,) activates the serving-prefill contract: the
+    recurrent-state mixers leave right-pad tokens out of the carried state
+    (bit-unchanged) and checkpoint at the true prompt length (see
+    :mod:`repro.models.ssm`); the attention slot path suppresses pad ring
+    WRITES and anchors read validity at the true last position — a fresh
+    prefill's pads would only land in never-valid slots, but a RESUMED
+    chunk's bucket can wrap the ring over live early-prompt K/V.
+    """
     aux = jnp.zeros((), jnp.float32)
     if s.kind == "rwkv":
-        x, new_cache = ssm.rwkv_block(sp, x, cfg.rwkv_cfg(), cache)
+        x, new_cache = ssm.rwkv_block(sp, x, cfg.rwkv_cfg(), cache,
+                                      lengths=lengths)
         return x, aux, new_cache
     h = L.rmsnorm(sp["norm"], x)
     new_cache = cache
@@ -364,9 +374,12 @@ def _apply_sub(sp: Params, s: SubSpec, cfg: ModelConfig, x, positions,
         if cache is not None:
             # per-slot caches (pos is (B,), serving engine) take the
             # scatter-write path; scalar pos keeps the original decode op
-            fn = (L.attention_decode_slots if cache["pos"].ndim
-                  else L.attention_decode)
-            o, kv = fn(sp, acfg, h, cache, cache["pos"])
+            if cache["pos"].ndim:
+                o, kv = L.attention_decode_slots(sp, acfg, h, cache,
+                                                 cache["pos"],
+                                                 lengths=lengths)
+            else:
+                o, kv = L.attention_decode(sp, acfg, h, cache, cache["pos"])
             new_cache = {**kv, "pos": cache["pos"]}
         else:
             o = L.attention(sp, acfg, h, positions)
@@ -378,14 +391,15 @@ def _apply_sub(sp: Params, s: SubSpec, cfg: ModelConfig, x, positions,
         fn = _moe_dispatch if cfg.moe.impl == "dispatch" else _moe_masked
         o, aux = fn(sp, h, cfg)
     elif s.kind == "mamba":
-        o, new_cache = ssm.mamba_block(sp, h, cfg.mamba_cfg(), cache)
+        o, new_cache = ssm.mamba_block(sp, h, cfg.mamba_cfg(), cache,
+                                       lengths=lengths)
     else:
         raise ValueError(s.kind)
     return x + o, aux, new_cache
 
 
 def _run_stack(layer_params, pattern, cfg: ModelConfig, x, positions,
-               memory=None, caches=None):
+               memory=None, caches=None, lengths=None):
     """Scan over periods; returns (x, aux_sum, new_caches)."""
     decode = caches is not None
 
@@ -409,7 +423,7 @@ def _run_stack(layer_params, pattern, cfg: ModelConfig, x, positions,
                 has_cache = decode and s.kind in ("attn", "mamba", "rwkv")
                 c = cache_slice[ci] if has_cache else None
                 h, a, nc = sub_fn(params_slice[pos][si], s, cfg, h,
-                                  positions, memory, c)
+                                  positions, memory, c, lengths)
                 aux = aux + a
                 if has_cache:
                     new_cs.append(nc)
@@ -566,6 +580,37 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return tuple(caches)
 
 
+def cache_layer_kinds(cfg: ModelConfig) -> tuple:
+    """Kind of each entry of the caches tuple, in cache order.
+
+    One entry per cached sublayer per pattern period: ``"attn"`` (ring KV +
+    per-row ``pos``), ``"mamba"`` (conv window + selective-scan state) or
+    ``"rwkv"`` (token-shift carries + WKV state). The serving paths dispatch
+    on this instead of assuming attention-only caches.
+    """
+    return tuple(s.kind for layer in cfg.pattern for s in layer
+                 if s.kind in ("attn", "mamba", "rwkv"))
+
+
+def merge_cache_rows(new_caches, old_caches, active):
+    """Row-wise cache merge: rows where ``active`` is True take ``new``,
+    every other row keeps ``old`` bit-unchanged.
+
+    Works on the stacked (n_periods, batch, ...) layout for every cache
+    kind — attention K/V rings, SSM states, token-shift carries — which is
+    what lets one jitted step serve any busy/free slot mix: inactive rows
+    may compute garbage, but none of it survives the merge.
+    """
+    def merge(new, old):
+        if new.ndim < 2:
+            return new
+        m = active.reshape((1, -1) + (1,) * (new.ndim - 2))
+        return jnp.where(m, new, old)
+
+    return tuple(jax.tree.map(merge, nc, oc)
+                 for nc, oc in zip(new_caches, old_caches))
+
+
 def decode_step(params, cfg: ModelConfig, inputs, caches, memory=None,
                 active=None):
     """One-token decode. inputs: {'tokens': (B,1)} or {'embeds': (B,1,D)},
@@ -573,14 +618,18 @@ def decode_step(params, cfg: ModelConfig, inputs, caches, memory=None,
 
     ``active`` (per-slot caches only): (B,) bool — rows whose slot currently
     holds an in-flight request. Inactive rows still compute (one jitted step
-    serves any slot mix) but their position does NOT advance, so their next
-    real token overwrites whatever this tick scribbled at the write slot.
+    serves any slot mix) but their cache rows are merged back to their old
+    values and their position does NOT advance — for attention that merely
+    un-scribbles the write slot, for recurrent-state mixers it is what keeps
+    a free/prefilling slot's carried state intact across decode ticks.
     """
     x, _ = embed_inputs(params, cfg, inputs)
     x, _, new_caches = _run_stack(params["layers"], cfg.pattern, cfg, x,
                                   None, memory, caches)
     x = L.rmsnorm(params["final_norm"], x)
     logits = unembed(params, cfg, x)[:, -1]
+    if active is not None:
+        new_caches = merge_cache_rows(new_caches, caches, active)
     return logits.astype(jnp.float32), advance_pos_stacked(new_caches, active)
 
 
@@ -608,14 +657,18 @@ def advance_pos(caches, active=None):
 def supports_slot_serving(cfg: ModelConfig) -> bool:
     """Whether the continuous-batching engine can drive this architecture.
 
-    Slot prefill right-pads prompts to a bucket length; attention masks the
-    pad positions out of every future read, but a recurrent-state mixer
-    (mamba/rwkv) would fold pad tokens into its state, and the stub embed /
-    encoder-decoder frontends have no token prompts to prefill.
+    Any decoder-only token-prompt architecture qualifies — attention, MLP,
+    MoE, and the recurrent-state mixers (mamba/rwkv). Attention masks pad
+    positions out of every future read; SSM prefill masks the state update
+    past the true prompt length and checkpoints the carry there
+    (``lengths``-aware paths in :mod:`repro.models.ssm`), so bucketed
+    right-padding never leaks into either cache kind. Only the stub-embed
+    and encoder-decoder frontends stay out: they have no token prompts to
+    prefill.
     """
     kinds = {s.kind for layer in cfg.pattern for s in layer}
     return (cfg.input_mode == "tokens" and not cfg.n_enc_layers
-            and kinds <= {"attn", "mlp", "moe"})
+            and kinds <= {"attn", "mlp", "moe", "mamba", "rwkv"})
 
 
 def reset_cache_slots(caches, free_mask):
@@ -641,53 +694,62 @@ def reset_cache_slots(caches, free_mask):
     return tuple(fix(c) for c in caches)
 
 
-def prefill_step(params, cfg: ModelConfig, inputs, caches, lengths, active):
+def prefill_step(params, cfg: ModelConfig, inputs, caches, lengths, active,
+                 resume: bool = False):
     """Prefill prompts into per-slot caches (continuous-batching admission).
 
     inputs: {'tokens': (B, Tc)} right-padded prompts; lengths: (B,) int32
-    true prompt lengths (<= Tc); active: (B,) bool — rows being admitted this
-    call. Active rows restart at position zero: ring slots ``0..len-1`` take
-    the prompt K/V and ``pos`` becomes ``lengths``. Inactive rows' caches
-    pass through bit-unchanged — in-flight decode state in other slots is
-    never disturbed, which is what lets prefill interleave with decode.
-    Returns (logits (B, V) at each row's LAST prompt token — i.e. the first
-    generated token's distribution — and the merged caches).
+    true prompt lengths (<= Tc); active: (B,) bool — rows being admitted
+    this call. With ``resume=False`` active rows restart from scratch:
+    attention positions zero (ring slots ``0..len-1`` take the prompt K/V),
+    recurrent-state caches zeroed. With ``resume=True`` (chunked admission,
+    chunks 2..n of a long prompt) active rows CONTINUE from their current
+    cache — attention writes ring slots ``pos..pos+len-1``, SSM carries
+    advance from the checkpointed state — and ``pos`` grows by ``lengths``.
+    Either way inactive rows' caches pass through bit-unchanged: in-flight
+    decode state in other slots is never disturbed, which is what lets
+    prefill interleave with decode.
+    Returns (logits (B, V) at each row's LAST real token of this chunk —
+    for the final chunk, the first generated token's distribution — and the
+    merged caches).
 
-    Pad positions ``t >= len`` are written to ring slots the validity mask
-    keeps unreadable (their ``ki`` exceeds the row's ``pos``), so padding
-    never leaks into later decode; MoE rows may drop differently per bucket
-    length, so admission must bucket by prompt length deterministically.
+    Pad positions ``t >= len`` never leak: attention writes them to ring
+    slots the validity mask keeps unreadable (their ``ki`` exceeds the
+    row's ``pos``), and the SSM paths mask the state update past ``len``
+    (``lengths``-aware :mod:`repro.models.ssm`). MoE rows may drop
+    differently per bucket length, so admission must bucket and chunk by
+    prompt length deterministically.
     """
-    # run every row from position zero; rows not being admitted compute
-    # garbage that the merge below discards
-    zeroed = tuple(
-        ({**c, "pos": jnp.zeros_like(c["pos"])}
-         if isinstance(c, dict) and "pos" in c else c)
-        for c in caches)
+    if resume:
+        start = caches
+    else:
+        # run every row from scratch; rows not being admitted compute
+        # garbage that the merge below discards. Attention needs only
+        # pos=0 (ring overwrite + validity hide stale K/V); recurrent
+        # caches are the state itself and must be zeroed.
+        start = tuple(
+            ({**c, "pos": jnp.zeros_like(c["pos"])}
+             if isinstance(c, dict) and "pos" in c
+             else jax.tree.map(jnp.zeros_like, c))
+            for c in caches)
     x, _ = embed_inputs(params, cfg, inputs)
     x, _, new_caches = _run_stack(params["layers"], cfg.pattern, cfg, x,
-                                  None, None, zeroed)
+                                  None, None, start, lengths=lengths)
     x = L.rmsnorm(params["final_norm"], x)
     idx = jnp.clip(lengths - 1, 0)[:, None, None]
     last = jnp.take_along_axis(x, jnp.broadcast_to(
         idx, (x.shape[0], 1, x.shape[2])), axis=1)
     logits = unembed(params, cfg, last)[:, 0].astype(jnp.float32)
 
-    def merge(new, old):
-        if new.ndim < 2:
-            return new
-        m = active.reshape((1, -1) + (1,) * (new.ndim - 2))
-        return jnp.where(m, new, old)
-
-    merged = []
-    for new_c, old_c in zip(new_caches, caches):
+    merged = merge_cache_rows(new_caches, caches, active)
+    # _run_stack leaves attention ``pos`` at its start value; set admitted
+    # rows to their post-chunk token counts explicitly
+    out = []
+    for new_c, old_c in zip(merged, caches):
         if isinstance(new_c, dict) and "pos" in new_c:
-            pos = jnp.where(active[None], lengths[None], old_c["pos"])
-            merged.append({**jax.tree.map(merge, {k: new_c[k] for k in new_c
-                                                  if k != "pos"},
-                                          {k: old_c[k] for k in old_c
-                                           if k != "pos"}),
-                           "pos": pos})
+            base = old_c["pos"] if resume else jnp.zeros_like(old_c["pos"])
+            pos = jnp.where(active[None], base + lengths[None], old_c["pos"])
+            out.append({**new_c, "pos": pos})
         else:
-            merged.append(jax.tree.map(merge, new_c, old_c))
-    return logits, tuple(merged)
+            out.append(new_c)
+    return logits, tuple(out)

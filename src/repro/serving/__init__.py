@@ -3,9 +3,13 @@
 Layer map (see docs/serving.md for the request lifecycle and DESIGN.md for
 the dataflow diagram):
 
-  request.py    — Request objects + lifecycle (QUEUED -> ACTIVE -> DONE)
-  scheduler.py  — FIFO admission into KV-cache slots (+ the static policy)
+  request.py    — Request objects + lifecycle
+                  (QUEUED -> PREFILLING -> ACTIVE -> DONE)
+  scheduler.py  — FIFO admission into cache slots (+ the static policy)
   engine.py     — the engine loop over the slot-aware prefill/decode steps
+                  (chunked long-prompt admission, SSM-aware prefill)
+  sampling.py   — temperature/top-k/top-p with per-request seeded keys;
+                  greedy is the bit-exact default
   telemetry.py  — per-tick stats, cross-replica b=1 dual-root reduction
   fleet.py      — replica heartbeats -> re-queue + plan_remesh on death
 """
@@ -13,6 +17,7 @@ the dataflow diagram):
 from repro.serving.engine import ServingEngine
 from repro.serving.fleet import FailoverPlan, ReplicaFleet
 from repro.serving.request import Request, RequestState
+from repro.serving.sampling import GREEDY, SamplingParams, sample_tokens
 from repro.serving.scheduler import SlotScheduler
 from repro.serving.telemetry import (STATS_COLLECTIVE, STATS_FIELDS,
                                      StepStats, TelemetryLog,
@@ -21,5 +26,6 @@ from repro.serving.telemetry import (STATS_COLLECTIVE, STATS_FIELDS,
 __all__ = [
     "ServingEngine", "Request", "RequestState", "SlotScheduler",
     "ReplicaFleet", "FailoverPlan", "TelemetryLog", "StepStats",
+    "SamplingParams", "GREEDY", "sample_tokens",
     "make_stats_reducer", "STATS_FIELDS", "STATS_COLLECTIVE",
 ]

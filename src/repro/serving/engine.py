@@ -1,21 +1,36 @@
-"""Continuous-batching serving engine on per-slot KV caches.
+"""Continuous-batching serving engine on per-slot caches (KV ring or SSM
+state — any architecture :func:`repro.models.transformer.supports_slot_serving`
+admits).
 
 The engine owns two jitted steps built by :mod:`repro.launch.step_fns`:
 
 * a cache-writing **prefill** step (one compilation per prompt bucket
-  length; one call per admitted request) that runs the prompt as a single
-  row against a zero cache, splices the finished row into the request's
-  slot, and emits the request's first token — while in-flight decode state
-  in every other slot passes through untouched;
+  length × {fresh, resume}; one call per prompt CHUNK) that runs the chunk
+  as a single row, splices the finished row into the request's slot, and —
+  on the final chunk — emits the request's first token, sampled by the
+  request's seeded sampler (greedy by default) — while in-flight decode
+  state in every other slot passes through untouched;
 * a slot-aware **decode** step (compiled once) that advances every busy
-  slot by one token per tick.
+  slot by one token per tick, sampling inside the jitted step.
 
-Because a slot is freed by resetting its per-row position counter, a
-finished request's slot is re-admissible on the very next tick with no
-re-jitting and no device reallocation — the property that makes continuous
-batching beat the static loop: the static policy holds all ``n_slots``
-rows hostage until the batch's LONGEST request finishes, decoding mostly
-padding near the end, while the engine refills each slot the tick it frees.
+Prompts longer than ``prefill_chunk`` are split into fixed-size chunks fed
+one per tick, interleaved with in-flight decode — a long prompt occupies
+one slot while admitting instead of stalling the whole engine. Chunking is
+a pure function of the prompt length and the engine constants, never of
+scheduling, so continuous and static runs chunk identically and token
+streams stay bit-identical across policies. Recurrent-state (mamba/rwkv)
+slots ride the same machinery: their prefill checkpoints the carry at the
+true prompt length (pads leave it bit-unchanged), and the decode step
+merges inactive rows' states back so a prefilling neighbor slot is never
+disturbed.
+
+Because a slot is freed by resetting its per-row position counter (and
+zeroing recurrent rows), a finished request's slot is re-admissible on the
+very next tick with no re-jitting and no device reallocation — the property
+that makes continuous batching beat the static loop: the static policy
+holds all ``n_slots`` rows hostage until the batch's LONGEST request
+finishes, decoding mostly padding near the end, while the engine refills
+each slot the tick it frees.
 
 Time runs on two clocks: *ticks* (one loop iteration; arrival staggering
 and TTFT/latency are measured in ticks, deterministically) and wall seconds
@@ -35,7 +50,8 @@ import numpy as np
 from repro.configs.base import ParallelConfig, ShapeSuite
 from repro.launch import step_fns
 from repro.models import transformer as tf
-from repro.serving.request import Request
+from repro.serving import sampling
+from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import SlotScheduler
 from repro.serving.telemetry import TelemetryLog
 
@@ -51,24 +67,31 @@ class ServingEngine:
     """Continuous-batching decode engine for one data-parallel replica.
 
     ``n_slots`` is the cache batch (concurrent requests); ``max_len`` the
-    per-slot ring-cache length. ``stats_reducer`` (see
-    :func:`repro.serving.telemetry.make_stats_reducer`) sums per-tick stats
-    across replicas with the b=1 dual-root tree; None = single replica.
+    per-slot ring-cache length. ``prefill_chunk`` bounds how much prompt
+    one prefill call writes (default: the largest single call the cache
+    geometry allows); longer prompts stream in chunk-per-tick.
+    ``stats_reducer`` (see :func:`repro.serving.telemetry.make_stats_reducer`)
+    sums per-tick stats across replicas with the b=1 dual-root tree;
+    None = single replica.
     """
 
     def __init__(self, cfg, pcfg: ParallelConfig, mesh, params, *,
                  n_slots: int = 4, max_len: int = 128,
-                 min_prefill_bucket: int = 16, stats_reducer=None):
+                 min_prefill_bucket: int = 16, prefill_chunk: int | None = None,
+                 stats_reducer=None):
         if not tf.supports_slot_serving(cfg):
             raise ValueError(
-                f"{cfg.name}: slot serving needs input_mode='tokens', no "
-                "encoder, and attention-only cache layers (recurrent-state "
-                "mixers would fold prompt padding into their state)")
+                f"{cfg.name}: slot serving needs input_mode='tokens' and no "
+                "encoder stack (stub-embed / encoder-decoder frontends have "
+                "no token prompts to prefill)")
         self.cfg, self.pcfg, self.mesh = cfg, pcfg, mesh
         self.n_slots, self.max_len = n_slots, max_len
-        # longest admissible prompt: every attention sublayer must fit the
-        # whole prompt in its (possibly window/chunk-bounded) ring cache,
-        # or one prefill call would write a ring slot twice
+        self.cache_kinds = tf.cache_layer_kinds(cfg)
+        self._has_attn = "attn" in self.cache_kinds
+        # longest single prefill CALL: every attention sublayer must fit the
+        # chunk in its (possibly window/chunk-bounded) ring cache, or one
+        # call would write a ring slot twice. Longer prompts are CHUNKED
+        # across calls, not rejected. Pure-recurrent stacks have no ring.
         s_min = max_len
         for layer in cfg.pattern:
             for s in layer:
@@ -77,7 +100,12 @@ class ServingEngine:
                         s_min = min(s_min, s.sliding_window)
                     if s.chunk_size is not None:
                         s_min = min(s_min, s.chunk_size)
-        self.max_prompt_len = s_min
+        self.max_prompt_len = s_min          # per-call bound (kept name: API)
+        self.prefill_chunk = (s_min if prefill_chunk is None
+                              else min(prefill_chunk, s_min))
+        if self.prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.min_prefill_bucket = min(min_prefill_bucket, s_min)
 
         suite = ShapeSuite("serve", max_len, n_slots, "decode")
@@ -103,15 +131,21 @@ class ServingEngine:
                    self.max_prompt_len)
 
     def _check(self, req: Request) -> None:
-        if len(req.prompt) > self.max_prompt_len:
-            raise ValueError(
-                f"request {req.rid}: prompt {len(req.prompt)} exceeds the "
-                f"cache window {self.max_prompt_len}")
-        if len(req.prompt) + req.max_new_tokens > self.max_len:
+        if self._has_attn and \
+                len(req.prompt) + req.max_new_tokens > self.max_len:
+            # ring capacity is absolute-position bound for full attention;
+            # pure-recurrent stacks carry O(1) state and take any length
             raise ValueError(
                 f"request {req.rid}: prompt+generation "
                 f"{len(req.prompt) + req.max_new_tokens} exceeds cache "
                 f"length {self.max_len}")
+
+    def _chunk_plan(self, prompt) -> list:
+        """Split a prompt into prefill chunks — a pure function of the
+        prompt length and engine constants (never of scheduling), so every
+        policy chunks identically and token streams match bit-for-bit."""
+        c = self.prefill_chunk
+        return [prompt[i:i + c] for i in range(0, len(prompt), c)]
 
     # ---------------------------------------------------------------- run
     def run(self, requests, *, static: bool = False,
@@ -121,8 +155,9 @@ class ServingEngine:
         ``static=True`` runs the batch-synchronous reference policy (admit
         only full batches into an all-free slot table) through the same
         jitted steps. Token streams are identical either way — each batch
-        row's computation depends only on its own request — so the policies
-        differ exactly in scheduling: slot occupancy, TTFT, and wall time.
+        row's computation depends only on its own request, chunk plans and
+        sampler keys only on the request itself — so the policies differ
+        exactly in scheduling: slot occupancy, TTFT, and wall time.
         """
         sched = SlotScheduler(self.n_slots)
         for req in requests:
@@ -134,6 +169,8 @@ class ServingEngine:
                           per_slot=True),
             self._cache_sharding)
         last = np.zeros(self.n_slots, np.int32)
+        samp = sampling.slot_arrays(self.n_slots)
+        pending_chunks: dict = {}     # slot -> remaining prompt chunks
 
         t0 = time.perf_counter()
         now = 0
@@ -141,56 +178,104 @@ class ServingEngine:
             if now >= max_ticks:
                 raise RuntimeError(f"serving stalled after {max_ticks} ticks")
             new_tokens = 0
+            sampled_tokens = 0
+            chunks_fed = 0
             freed = np.zeros(self.n_slots, bool)
 
-            # --- admission: prefill arrived requests into free slots -------
-            # one single-row call per request (cost follows the admitted
-            # prompt, not n_slots); the prompt bucket keeps Tc off the
-            # compile-cache hot path
+            # --- admission: grant free slots, stage the chunk plans --------
             admissions = sched.admit(now, batch_sync=static)
             for slot, req in admissions:
-                tc = self._bucket(len(req.prompt))
+                pending_chunks[slot] = self._chunk_plan(req.prompt)
+                sampling.set_slot(samp, slot, req.sampling)
+
+            # --- prefill: one chunk per admitting slot per tick ------------
+            # one single-row call per chunk (cost follows the admitted
+            # prompt, not n_slots); the prompt bucket keeps Tc off the
+            # compile-cache hot path. The final chunk emits the request's
+            # first token (sampled; greedy rows bit-exact argmax).
+            for slot in sorted(pending_chunks):
+                req = sched.active[slot]
+                chunk = pending_chunks[slot].pop(0)
+                final = not pending_chunks[slot]
+                tc = self._bucket(len(chunk))
                 buf = np.zeros((1, tc), np.int32)
-                buf[0, :len(req.prompt)] = req.prompt
-                logits, self.caches = self._prefill(
+                buf[0, :len(chunk)] = chunk
+                sampled_req = (req.sampling is not None
+                               and not req.sampling.greedy)
+                tok, self.caches = self._prefill(
                     self.params, jnp.asarray(buf), self.caches,
                     jnp.asarray(slot, jnp.int32),
-                    jnp.asarray(len(req.prompt), jnp.int32))
-                tok = int(np.argmax(np.asarray(logits)))
-                req.tokens.append(tok)
-                req.t_first = now
-                last[slot] = tok
-                new_tokens += 1
-                if req.done:
-                    sched.release(slot, now)
-                    freed[slot] = True
+                    jnp.asarray(len(chunk), jnp.int32),
+                    resume=req.prefilled > 0,
+                    sampling_row=({k: jnp.asarray(v[slot])
+                                   for k, v in samp.items()}
+                                  if sampled_req else None))
+                req.prefilled += len(chunk)
+                chunks_fed += 1
+                if final:
+                    del pending_chunks[slot]
+                    req.state = RequestState.ACTIVE
+                    tok = int(np.asarray(tok))
+                    req.tokens.append(tok)
+                    req.t_first = now
+                    last[slot] = tok
+                    new_tokens += 1
+                    if req.sampling is not None and not req.sampling.greedy:
+                        sampled_tokens += 1
+                    if req.done:
+                        sched.release(slot, now)
+                        freed[slot] = True
 
-            # --- decode: one token for every busy slot ---------------------
-            busy = sched.active
-            if busy:
+            # --- decode: one token for every fully-prefilled busy slot -----
+            decodable = {slot: req for slot, req in sched.active.items()
+                         if req.state is RequestState.ACTIVE}
+            if decodable:
                 active = np.zeros(self.n_slots, bool)
-                for slot in busy:
+                steps = np.zeros(self.n_slots, np.int32)
+                any_sampled = False
+                for slot, req in decodable.items():
                     active[slot] = True
-                logits, self.caches = self._decode(
+                    steps[slot] = len(req.tokens)
+                    any_sampled |= (req.sampling is not None
+                                    and not req.sampling.greedy)
+                # all-greedy ticks take the argmax-only jitted variant;
+                # the sampled variant's greedy rows are the same argmax,
+                # so mixing never changes a greedy request's stream
+                samp_in = ({"key": jnp.asarray(samp["key"]),
+                            "step": jnp.asarray(steps),
+                            "temperature": jnp.asarray(samp["temperature"]),
+                            "top_k": jnp.asarray(samp["top_k"]),
+                            "top_p": jnp.asarray(samp["top_p"])}
+                           if any_sampled else None)
+                toks, self.caches = self._decode(
                     self.params, {"tokens": jnp.asarray(last[:, None])},
-                    self.caches, jnp.asarray(active))
-                toks = np.argmax(np.asarray(logits), -1).astype(np.int32)
-                for slot, req in busy.items():
+                    self.caches, jnp.asarray(active), samp_in)
+                toks = np.asarray(toks).astype(np.int32)
+                for slot, req in decodable.items():
                     req.tokens.append(int(toks[slot]))
                     last[slot] = toks[slot]
                     new_tokens += 1
+                    if req.sampling is not None and not req.sampling.greedy:
+                        sampled_tokens += 1
                     if req.done:
                         sched.release(slot, now)
                         freed[slot] = True
 
             if freed.any():
                 self.caches = self._reset(self.caches, jnp.asarray(freed))
+                for slot in np.flatnonzero(freed):
+                    sampling.set_slot(samp, int(slot), None)
             log.step(now, [sched.arrived_depth(now), len(sched.active),
-                           new_tokens, len(admissions)])
+                           new_tokens, len(admissions), chunks_fed,
+                           sampled_tokens])
             now += 1
 
         wall = time.perf_counter() - t0
         report = log.report(sched.finished, wall, now)
         report["mode"] = "static" if static else "continuous"
         report["tokens"] = {r.rid: list(r.tokens) for r in sched.finished}
+        report["sampled_tokens"] = int(sum(s.sampled_tokens
+                                           for s in log.steps))
+        report["prefill_chunks"] = int(sum(s.prefill_chunks
+                                           for s in log.steps))
         return report

@@ -1,12 +1,16 @@
 """Request objects and their lifecycle for the serving engine.
 
-A request is born QUEUED, becomes ACTIVE when the admission scheduler packs
-it into a KV-cache slot (its prompt is prefilled and its first token emitted
-in the same call), and becomes DONE when it has generated
-``max_new_tokens``. Timestamps are recorded in both clocks the engine runs:
-*ticks* (the virtual scheduling clock — one engine iteration per tick, which
-is what arrival staggering and TTFT/latency are measured in, deterministic
-across runs) and wall seconds (what throughput is measured in).
+A request is born QUEUED, becomes PREFILLING when the admission scheduler
+packs it into a KV-cache slot (its prompt starts streaming into the slot,
+one chunk per engine tick for prompts longer than the prefill chunk),
+becomes ACTIVE the tick its final prompt chunk lands and its first token is
+emitted, and becomes DONE when it has generated ``max_new_tokens``.
+Short prompts pass through PREFILLING and ACTIVE in the same tick — the
+one-chunk case is just a chunk plan of length one. Timestamps are recorded
+in both clocks the engine runs: *ticks* (the virtual scheduling clock — one
+engine iteration per tick, which is what arrival staggering and
+TTFT/latency are measured in, deterministic across runs) and wall seconds
+(what throughput is measured in).
 """
 
 from __future__ import annotations
@@ -14,10 +18,13 @@ from __future__ import annotations
 import dataclasses
 import enum
 
+from repro.serving.sampling import SamplingParams
+
 
 class RequestState(enum.Enum):
     QUEUED = "queued"      # submitted, waiting for a slot (or not yet arrived)
-    ACTIVE = "active"      # occupies a slot; prefilled, decoding
+    PREFILLING = "prefilling"  # slot granted; prompt chunks streaming in
+    ACTIVE = "active"      # fully prefilled; first token emitted; decoding
     DONE = "done"          # generated max_new_tokens; slot released
 
 
@@ -28,17 +35,22 @@ class Request:
     ``prompt`` is a tuple of token ids; ``arrival`` is the tick at which the
     request becomes admissible (requests submitted ahead of time stay
     invisible to the scheduler until then — the staggered-arrival workload).
+    ``sampling`` is None for greedy decoding (the bit-exact default) or a
+    :class:`~repro.serving.sampling.SamplingParams` for seeded
+    temperature/top-k/top-p sampling.
     """
 
     rid: int
     prompt: tuple
     max_new_tokens: int
     arrival: int = 0
+    sampling: SamplingParams | None = None
 
     # runtime fields, owned by the scheduler/engine
     state: RequestState = RequestState.QUEUED
     slot: int | None = None
     tokens: list = dataclasses.field(default_factory=list)  # generated ids
+    prefilled: int = 0               # prompt tokens already written to the slot
     t_admit: int | None = None       # tick the slot was granted
     t_first: int | None = None       # tick the first token was emitted
     t_done: int | None = None        # tick generation completed
@@ -56,7 +68,7 @@ class Request:
 
     @property
     def ttft(self) -> int | None:
-        """Time-to-first-token in ticks (admission wait + prefill)."""
+        """Time-to-first-token in ticks (admission wait + prefill chunks)."""
         return None if self.t_first is None else self.t_first - self.arrival
 
     @property

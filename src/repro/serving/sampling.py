@@ -1,0 +1,133 @@
+"""Token sampling for the serving engine: temperature / top-k / top-p.
+
+Greedy decoding (``temperature == 0``, the default) stays the bit-exact
+reference path — a plain argmax over the raw float32 logits, untouched by
+any of the machinery below. Non-greedy requests carry a
+:class:`SamplingParams`; all of it runs INSIDE the jitted decode/prefill
+steps so sampling adds no host round-trip per tick.
+
+Determinism contract (tested in tests/test_serving.py, documented in
+docs/sampling_and_prefill.md): the sampled token ``i`` of a request is a
+pure function of ``(logits_i, seed, i)`` —
+
+    key_i = fold_in(PRNGKey(seed), i)
+
+where ``i`` counts the request's OWN generated tokens, not engine ticks.
+Nothing about scheduling (slot placement, admission tick, continuous vs
+static policy, chunked vs one-shot prefill) enters the key derivation, so
+token streams are reproducible across every scheduling policy — the same
+property greedy decoding gets for free. Two requests sharing a seed and a
+prompt produce identical streams by design; callers wanting per-request
+variety derive per-request seeds (the CLI uses ``base_seed + rid``).
+
+The per-tick sampler telemetry (how many sampled vs greedy tokens each
+tick) rides the existing b=1 dual-root stats reduction — see
+``serving.telemetry.STATS_FIELDS``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding controls.
+
+    temperature: 0.0 = greedy (bit-exact argmax; the default). > 0 divides
+        the logits before the softmax-shaped filters below.
+    top_k: keep only the k highest logits (0 = off).
+    top_p: nucleus sampling — keep the smallest prefix of the
+        probability-sorted vocabulary whose mass reaches ``top_p``
+        (1.0 = off). Applied after top_k.
+    seed: base of the per-request key stream (see module docstring).
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+GREEDY = SamplingParams()
+
+
+def base_key(params: SamplingParams | None) -> np.ndarray:
+    """The request's base PRNG key as raw uint32 data (host-side, once per
+    request at admission; the per-token fold_in happens inside the step)."""
+    seed = 0 if params is None else params.seed
+    return np.asarray(jax.random.key_data(jax.random.PRNGKey(seed)),
+                      np.uint32)
+
+
+def sample_tokens(logits, keys, steps, temperature, top_k, top_p):
+    """Sample one token per row; greedy rows bypass everything.
+
+    logits: (B, V) float; keys: (B, 2) uint32 raw base keys;
+    steps: (B,) int32 per-request generated-token index; temperature (B,)
+    float32; top_k (B,) int32 (0 = off); top_p (B,) float32 (1 = off).
+    Returns (B,) int32 token ids. Traceable — called inside the jitted
+    serve/prefill steps with per-slot parameter vectors.
+    """
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    srt = jnp.sort(scaled, axis=-1)[:, ::-1]                 # descending
+    # top-k: keep logits >= the k-th largest (k=0 keeps everything)
+    kth = jnp.take_along_axis(
+        srt, jnp.clip(top_k - 1, 0, V - 1)[:, None], axis=-1)
+    keep = jnp.where((top_k > 0)[:, None], scaled >= kth, True)
+    # top-p over the top-k survivors: a token stays while the mass BEFORE
+    # it (exclusive cumsum of sorted probs) is still under top_p — the
+    # smallest prefix reaching the target, never empty for top_p > 0
+    probs = jax.nn.softmax(jnp.where(keep, scaled, -jnp.inf), axis=-1)
+    sp = jnp.sort(probs, axis=-1)[:, ::-1]
+    mass_before = jnp.cumsum(sp, axis=-1) - sp
+    kept_sorted = mass_before < top_p[:, None]
+    thr = jnp.min(jnp.where(kept_sorted, sp, jnp.inf), axis=-1, keepdims=True)
+    keep &= probs >= thr
+
+    masked = jnp.where(keep, scaled, -jnp.inf)
+    folded = jax.vmap(jax.random.fold_in)(keys, steps)
+    sampled = jax.vmap(jax.random.categorical)(folded, masked)
+    return jnp.where(temperature > 0.0, sampled.astype(jnp.int32),
+                     greedy_tok)
+
+
+def slot_arrays(n_slots: int):
+    """Mutable host-side per-slot sampler state the engine updates at
+    admission/release: (keys (n,2) u32, temperature (n,), top_k (n,),
+    top_p (n,)). Free slots read as greedy."""
+    return {
+        "key": np.zeros((n_slots, 2), np.uint32),
+        "temperature": np.zeros((n_slots,), np.float32),
+        "top_k": np.zeros((n_slots,), np.int32),
+        "top_p": np.ones((n_slots,), np.float32),
+    }
+
+
+def set_slot(arrays: dict, slot: int, params: SamplingParams | None) -> None:
+    """Install one request's sampling parameters into its slot row."""
+    p = params or GREEDY
+    arrays["key"][slot] = base_key(p)
+    arrays["temperature"][slot] = p.temperature
+    arrays["top_k"][slot] = p.top_k
+    arrays["top_p"][slot] = p.top_p

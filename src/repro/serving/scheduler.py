@@ -3,11 +3,14 @@
 The scheduler owns the queue and the slot table; the engine owns the device
 caches. Invariants (tested in tests/test_serving.py):
 
-* **no double-booking** — a slot holds at most one ACTIVE request, and a
-  request at most one slot;
+* **no double-booking** — a slot holds at most one PREFILLING/ACTIVE
+  request, and a request at most one slot;
 * **FIFO fairness** — requests are admitted strictly in queue order: a
   request that has not arrived yet blocks everything behind it (no
-  skip-ahead, so a long-prompt request cannot starve);
+  skip-ahead, so a long-prompt request cannot starve). Chunked prefill
+  does not bend this: a long prompt occupies exactly one slot while its
+  chunks stream in, and the requests behind it admit into the OTHER free
+  slots in order, same as ever;
 * **freed-slot reuse** — releasing a slot makes it immediately admissible
   again, with no device-side reallocation (the per-slot ``pos`` reset in
   the cache is what makes reuse safe without re-jitting).
@@ -50,6 +53,7 @@ class SlotScheduler:
             req.state = RequestState.QUEUED
             req.slot = None
             req.tokens = []
+            req.prefilled = 0
             req.t_admit = req.t_first = req.t_done = None
             self._queue.appendleft(req)
 
@@ -100,7 +104,9 @@ class SlotScheduler:
             slot = free.popleft()
             assert self._slots[slot] is None, "slot double-booked"
             assert req.slot is None, f"request {req.rid} already has a slot"
-            req.state = RequestState.ACTIVE
+            # the engine promotes PREFILLING -> ACTIVE when the final prompt
+            # chunk lands and the first token is emitted
+            req.state = RequestState.PREFILLING
             req.slot = slot
             req.t_admit = now
             self._slots[slot] = req

@@ -23,8 +23,18 @@ import numpy as np
 
 from repro.core.collectives import CollectiveConfig, all_reduce
 
-# field order of the per-tick stats vector (summed across replicas)
-STATS_FIELDS = ("queue_depth", "active_slots", "new_tokens", "prefills")
+# field order of the per-tick stats vector (summed across replicas):
+#   queue_depth    — arrived-but-unadmitted requests
+#   active_slots   — slots holding an in-flight request (incl. prefilling)
+#   new_tokens     — tokens emitted this tick (prefill first-tokens + decode)
+#   prefills       — requests whose admission started this tick
+#   prefill_chunks — prompt chunks written this tick (chunked admission; a
+#                    short prompt counts one chunk, a long one >= 2 spread
+#                    over consecutive ticks)
+#   sampled_tokens — of new_tokens, how many came from a seeded
+#                    temperature/top-k/top-p sampler rather than greedy
+STATS_FIELDS = ("queue_depth", "active_slots", "new_tokens", "prefills",
+                "prefill_chunks", "sampled_tokens")
 
 # b=1: latency-bound single-block pipeline; "auto": measured autotuner hit
 # if one exists for this (p, nbytes, dtype, fabric), else the cost-model
@@ -78,12 +88,14 @@ def make_stats_reducer(mesh, axis: str = "data",
 
 @dataclasses.dataclass(frozen=True)
 class StepStats:
-    """One engine tick's (cross-replica-summed) counters."""
+    """One engine tick's (cross-replica-summed) counters (see STATS_FIELDS)."""
     tick: int
     queue_depth: float
     active_slots: float
     new_tokens: float
     prefills: float
+    prefill_chunks: float = 0.0
+    sampled_tokens: float = 0.0
 
 
 class TelemetryLog:

@@ -180,6 +180,63 @@ def test_mamba_chunked_equals_naive():
                                rtol=1e-4, atol=1e-4)
 
 
+def test_ssm_blocks_pad_and_chunk_invariant():
+    """The serving-prefill contract (docs/sampling_and_prefill.md): with
+    ``lengths``, (a) right-pad tokens leave the carried state BIT-unchanged
+    — running a padded buffer checkpoints the same cache as running exactly
+    ``len`` tokens — and (b) splitting a sequence across calls reproduces
+    the one-shot cache bit-for-bit (the exact token recurrence is the only
+    path, so chunk boundaries are invisible)."""
+    L_real, T = 11, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, T, 32))
+    lens = jnp.array([L_real, L_real], jnp.int32)
+
+    rcfg = ssm.RWKVConfig(d_model=32, head_dim=8)
+    rp = ssm.rwkv_block_init(jax.random.PRNGKey(0), rcfg)
+    rc0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                       ssm.rwkv_cache_spec(rcfg, 2, jnp.float32))
+    _, pad = ssm.rwkv_block(rp, x, rcfg, rc0, lengths=lens)
+    _, exact = ssm.rwkv_block(rp, x[:, :L_real], rcfg, rc0, lengths=lens)
+    _, c1 = ssm.rwkv_block(rp, x[:, :6], rcfg, rc0,
+                           lengths=jnp.array([6, 6], jnp.int32))
+    _, c2 = ssm.rwkv_block(rp, x[:, 6:L_real], rcfg, c1,
+                           lengths=jnp.array([5, 5], jnp.int32))
+    for k in ("shift1", "shift2", "state"):
+        assert (np.asarray(pad[k]) == np.asarray(exact[k])).all(), k
+        assert (np.asarray(c2[k]) == np.asarray(exact[k])).all(), ("chunk", k)
+
+    mcfg = ssm.MambaConfig(d_model=32, d_state=8)
+    mp = ssm.mamba_init(jax.random.PRNGKey(2), mcfg)
+    mc0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                       ssm.mamba_cache_spec(mcfg, 2, jnp.float32))
+    _, mpad = ssm.mamba_block(mp, x, mcfg, mc0, lengths=lens)
+    _, mexact = ssm.mamba_block(mp, x[:, :L_real], mcfg, mc0, lengths=lens)
+    _, m1 = ssm.mamba_block(mp, x[:, :6], mcfg, mc0,
+                            lengths=jnp.array([6, 6], jnp.int32))
+    _, m2 = ssm.mamba_block(mp, x[:, 6:L_real], mcfg, m1,
+                            lengths=jnp.array([5, 5], jnp.int32))
+    for k in ("conv", "ssm"):
+        assert (np.asarray(mpad[k]) == np.asarray(mexact[k])).all(), k
+        assert (np.asarray(m2[k]) == np.asarray(mexact[k])).all(), ("chunk", k)
+
+
+def test_mamba_recurrent_prefill_matches_decode_branch_bitwise():
+    """One token through the lengths-aware recurrent scan is op-for-op the
+    T==1 decode branch — what makes chunked prefill then decode ticks one
+    seamless bit-exact stream."""
+    mcfg = ssm.MambaConfig(d_model=32, d_state=8)
+    mp = ssm.mamba_init(jax.random.PRNGKey(2), mcfg)
+    mc0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                       ssm.mamba_cache_spec(mcfg, 2, jnp.float32))
+    x1 = jax.random.normal(jax.random.PRNGKey(3), (2, 1, 32))
+    o_dec, c_dec = ssm.mamba_block(mp, x1, mcfg, mc0)
+    o_pre, c_pre = ssm.mamba_block(mp, x1, mcfg, mc0,
+                                   lengths=jnp.array([1, 1], jnp.int32))
+    assert (np.asarray(o_dec) == np.asarray(o_pre)).all()
+    for k in ("conv", "ssm"):
+        assert (np.asarray(c_dec[k]) == np.asarray(c_pre[k])).all(), k
+
+
 def test_mrope_reduces_to_rope_for_text():
     x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 16))
     pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))

@@ -1,5 +1,6 @@
 """Continuous-batching serving: scheduler invariants, engine integration,
-static-vs-continuous regression, telemetry reduction, fleet failover.
+static-vs-continuous regression, chunked/SSM prefill bit-identity, seeded
+sampling, telemetry reduction, fleet failover.
 
 Engine tests run a tiny inline config on the 1-device CPU mesh; everything
 decode-side goes through the real jitted slot steps.
@@ -13,9 +14,9 @@ import pytest
 from repro.configs.base import ParallelConfig, get_config
 from repro.launch.mesh import make_mesh
 from repro.models import transformer as tf
-from repro.models.transformer import ModelConfig
-from repro.serving import (Request, RequestState, ServingEngine,
-                           SlotScheduler, TelemetryLog)
+from repro.models.transformer import ModelConfig, SubSpec
+from repro.serving import (Request, RequestState, SamplingParams,
+                           ServingEngine, SlotScheduler, TelemetryLog)
 
 
 def tiny_cfg(**kw):
@@ -25,13 +26,19 @@ def tiny_cfg(**kw):
     return ModelConfig(**base)
 
 
+_PARAMS_CACHE = {}
+
+
 def make_engine(cfg=None, n_slots=3, max_len=32, **kw):
     cfg = cfg or tiny_cfg()
     mesh = make_mesh((1, 1), ("data", "model"))
-    params = tf.init_params(jax.random.PRNGKey(0), cfg)
-    return cfg, ServingEngine(cfg, ParallelConfig(), mesh, params,
-                              n_slots=n_slots, max_len=max_len,
-                              min_prefill_bucket=8, **kw)
+    key = (cfg.name, cfg.n_layers, cfg.d_model)
+    if key not in _PARAMS_CACHE:
+        _PARAMS_CACHE[key] = tf.init_params(jax.random.PRNGKey(0), cfg)
+    kw.setdefault("min_prefill_bucket", 8)
+    return cfg, ServingEngine(cfg, ParallelConfig(), mesh,
+                              _PARAMS_CACHE[key], n_slots=n_slots,
+                              max_len=max_len, **kw)
 
 
 def make_requests(n, cfg, *, gap=0, seed=0, max_new=(2, 8), plen=(2, 7)):
@@ -193,14 +200,223 @@ def test_engine_moe_and_gqa_variants():
 
 
 def test_engine_rejects_unsupported_archs_and_oversize():
-    cfg = get_config("rwkv6_7b", reduced=True)
+    """SSM/hybrid archs are now admissible; only the promptless frontends
+    (stub-embed, encoder-decoder) stay out — and full-attention ring
+    capacity still bounds prompt+generation."""
     mesh = make_mesh((1, 1), ("data", "model"))
-    params = tf.init_params(jax.random.PRNGKey(0), cfg)
-    with pytest.raises(ValueError, match="slot serving"):
-        ServingEngine(cfg, ParallelConfig(), mesh, params)
+    for arch in ("qwen2_vl_7b", "seamless_m4t_large_v2"):
+        cfg = get_config(arch, reduced=True)
+        assert not tf.supports_slot_serving(cfg)
+        params = tf.init_params(jax.random.PRNGKey(0), cfg)
+        with pytest.raises(ValueError, match="slot serving"):
+            ServingEngine(cfg, ParallelConfig(), mesh, params)
+    for arch in ("rwkv6_7b", "jamba_v0_1_52b", "minicpm_2b"):
+        assert tf.supports_slot_serving(get_config(arch, reduced=True))
     cfg2, eng = make_engine(max_len=16)
     with pytest.raises(ValueError, match="exceeds"):
         eng.run([Request(0, (1,) * 4, max_new_tokens=14)])
+
+
+# ==========================================================================
+# chunked long-prompt admission
+# ==========================================================================
+
+def test_chunked_prefill_bit_identical_to_one_shot():
+    """The same long prompt fed chunk-per-tick (prefill_chunk=8) and in one
+    call (chunk covering the prompt) produces bit-identical token streams,
+    and both match the static policy — attention ring writes and validity
+    masks see the same (slot, position) layout either way."""
+    prompt = tuple(int(t) for t in
+                   np.random.default_rng(0).integers(1, 101, 20))
+    reqs = lambda: [Request(0, prompt, max_new_tokens=5),
+                    Request(1, (7, 3), max_new_tokens=4, arrival=1)]
+    _, chunked = make_engine(n_slots=2, max_len=64, prefill_chunk=8)
+    _, oneshot = make_engine(n_slots=2, max_len=64, prefill_chunk=32)
+    a = chunked.run(reqs())
+    b = oneshot.run(reqs())
+    c = chunked.run(reqs(), static=True)
+    assert a["tokens"] == b["tokens"] == c["tokens"]
+    # 20-token prompt in chunks of 8 -> 3 chunks; the short one takes 1
+    assert a["prefill_chunks"] == 4 and b["prefill_chunks"] == 2
+
+
+def test_chunked_prefill_bucket_wrap_does_not_clobber_ring():
+    """Regression: a RESUMED final chunk's bucket pads can wrap the ring
+    past the row's earliest live K/V (prompt 28, chunk 8, ring 32: final
+    chunk at pos=24 buckets to 16 -> ring slots 24..31 then 0..7). Pad
+    writes must be suppressed or they overwrite prompt tokens 0..7 that
+    position arithmetic still reads as valid."""
+    prompt = tuple(int(t) for t in
+                   np.random.default_rng(5).integers(1, 101, 28))
+    reqs = lambda: [Request(0, prompt, max_new_tokens=4)]
+    _, chunked = make_engine(n_slots=2, max_len=32, prefill_chunk=8,
+                             min_prefill_bucket=16)
+    _, oneshot = make_engine(n_slots=2, max_len=32, prefill_chunk=32,
+                             min_prefill_bucket=16)
+    a, b = chunked.run(reqs()), oneshot.run(reqs())
+    assert a["tokens"] == b["tokens"]
+
+    # sliding-window arch: the ring is only window wide, so a padded
+    # resumed bucket wraps for nearly any chunked prompt. Chunk-PLAN
+    # determinism (continuous == static == rerun) is the windowed
+    # guarantee; invariance to a DIFFERENT chunk size is information-
+    # theoretically unavailable (a W-sized ring cannot keep the full
+    # window for every early in-call query of a longer call — deep-layer
+    # cache content legitimately depends on the plan; see
+    # docs/sampling_and_prefill.md)
+    swcfg = tiny_cfg(name="serve-swa",
+                     pattern=((SubSpec(kind="attn", sliding_window=16),
+                               "mlp"),))
+    prompt41 = tuple(int(t) for t in
+                     np.random.default_rng(6).integers(1, 101, 41))
+    reqs41 = lambda: [Request(0, prompt41, max_new_tokens=4)]
+    _, sw8 = make_engine(cfg=swcfg, n_slots=2, max_len=64, prefill_chunk=8)
+    a = sw8.run(reqs41())
+    b = sw8.run(reqs41())
+    c = sw8.run(reqs41(), static=True)
+    assert a["tokens"] == b["tokens"] == c["tokens"]
+    assert a["prefill_chunks"] == 6                     # 41 tokens / 8
+
+
+def test_chunked_prefill_state_machine_and_fifo():
+    """A long prompt PREFILLING for several ticks holds exactly one slot:
+    its chunks interleave with the other slot's decode, TTFT counts the
+    chunk ticks, and FIFO admission is unchanged."""
+    prompt = tuple(range(1, 25))                       # 24 tokens, chunk 8
+    _, eng = make_engine(n_slots=2, max_len=64, prefill_chunk=8)
+    long = Request(0, prompt, max_new_tokens=4)
+    short = Request(1, (5, 9), max_new_tokens=6)
+    report = eng.run([long, short])
+    assert long.state is RequestState.DONE and long.prefilled == len(prompt)
+    assert long.ttft == 2                  # 3 chunks: first token on tick 2
+    assert short.ttft == 0                 # admitted alongside, undisturbed
+    assert len(long.tokens) == 4 and len(short.tokens) == 6
+    # the long prompt's stream must not depend on the neighbor's traffic
+    _, solo = make_engine(n_slots=2, max_len=64, prefill_chunk=8)
+    alone = solo.run([Request(2, prompt, max_new_tokens=4)])
+    assert report["tokens"][0] == alone["tokens"][2]
+
+
+# ==========================================================================
+# SSM / hybrid slot serving
+# ==========================================================================
+
+def test_ssm_engine_long_prompt_chunked_matches_one_shot_and_static():
+    """The acceptance bar: an RWKV6 (recurrent-state) config with a prompt
+    longer than the prefill bucket serves continuously with chunked
+    admission, bit-identical to one-shot prefill and to the static policy
+    under greedy decoding — the state checkpoint at the true length plus
+    the exact token recurrence make chunking invisible."""
+    cfg = get_config("rwkv6_7b", reduced=True)
+    prompt = tuple(int(t) for t in
+                   np.random.default_rng(1).integers(1, cfg.vocab_size, 50))
+    reqs = lambda: [Request(0, prompt, max_new_tokens=6),
+                    Request(1, prompt[:5], max_new_tokens=4, arrival=1)]
+    _, chunked = make_engine(cfg=cfg, n_slots=2, max_len=32,
+                             prefill_chunk=16)
+    _, oneshot = make_engine(cfg=cfg, n_slots=2, max_len=32,
+                             prefill_chunk=32)
+    a = chunked.run(reqs())
+    b = oneshot.run(reqs())
+    c = chunked.run(reqs(), static=True)
+    assert a["tokens"] == b["tokens"] == c["tokens"]
+    assert a["prefill_chunks"] > b["prefill_chunks"]
+
+
+def test_ssm_slot_reuse_leaves_no_state_residue():
+    """A freed slot's recurrent state must not leak into the next occupant:
+    a request admitted into a reused slot decodes exactly as on a fresh
+    engine (rwkv carries + hybrid mamba/attn/moe caches)."""
+    for arch in ("rwkv6_7b", "jamba_v0_1_52b"):
+        cfg = get_config(arch, reduced=True)
+        _, eng = make_engine(cfg=cfg, n_slots=1, max_len=48)
+        first = Request(0, (7, 3, 11), max_new_tokens=6)
+        probe = Request(1, (23, 2, 5, 8), max_new_tokens=5)
+        report = eng.run([first, probe])              # probe reuses the slot
+        fresh = eng.run([Request(2, (23, 2, 5, 8), max_new_tokens=5)])
+        assert report["tokens"][1] == fresh["tokens"][2], arch
+
+
+def test_ssm_decode_inactive_slots_keep_state():
+    """Decode ticks on a partially-busy engine must not corrupt an idle or
+    prefilling slot's recurrent state: a request arriving mid-run (its slot
+    idle while others decode) matches its solo-run stream."""
+    cfg = get_config("rwkv6_7b", reduced=True)
+    _, eng = make_engine(cfg=cfg, n_slots=2, max_len=32)
+    late = Request(1, (9, 4, 17, 2), max_new_tokens=4, arrival=6)
+    both = eng.run([Request(0, (3, 8), max_new_tokens=10), late])
+    solo = eng.run([Request(2, (9, 4, 17, 2), max_new_tokens=4)])
+    assert both["tokens"][1] == solo["tokens"][2]
+
+
+# ==========================================================================
+# sampling
+# ==========================================================================
+
+def test_seeded_sampling_reproducible_across_policies():
+    """Seeded top-p streams are a pure function of (request, seed): two
+    continuous runs and a static run all reproduce bit-for-bit, and a
+    different seed moves the streams."""
+    sp = SamplingParams(temperature=0.9, top_p=0.85, seed=11)
+    reqs = lambda seed: [
+        Request(i, (5 + i, 9, 2), max_new_tokens=6, arrival=i,
+                sampling=SamplingParams(temperature=0.9, top_p=0.85,
+                                        seed=seed + i))
+        for i in range(3)]
+    _, eng = make_engine(n_slots=3)
+    a = eng.run(reqs(11))
+    b = eng.run(reqs(11))
+    c = eng.run(reqs(11), static=True)
+    assert a["tokens"] == b["tokens"] == c["tokens"]
+    assert a["sampled_tokens"] == a["total_tokens"]
+    d = eng.run(reqs(12))
+    assert d["tokens"] != a["tokens"]
+
+
+def test_sampling_mixes_with_greedy_and_counts_in_telemetry():
+    """Greedy and sampled requests share one engine tick; greedy rows stay
+    the bit-exact argmax path and only sampled tokens count as sampled."""
+    greedy = lambda: Request(0, (7, 3, 11), max_new_tokens=5)
+    sampled = lambda: Request(1, (7, 3, 11), max_new_tokens=5,
+                              sampling=SamplingParams(temperature=1.1,
+                                                      top_k=7, seed=4))
+    _, eng = make_engine(n_slots=2)
+    mixed = eng.run([greedy(), sampled()])
+    assert mixed["sampled_tokens"] == 5
+    ref = eng.run([greedy()])
+    assert mixed["tokens"][0] == ref["tokens"][0]     # greedy row untouched
+    # per-tick counters add up across the run
+    assert sum(s.sampled_tokens for s in mixed["steps"]) == 5
+    assert sum(s.prefill_chunks for s in mixed["steps"]) \
+        == mixed["prefill_chunks"]
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError, match="temperature"):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError, match="top_k"):
+        SamplingParams(top_k=-1)
+    assert SamplingParams().greedy
+    assert not SamplingParams(temperature=0.5).greedy
+
+
+def test_sample_tokens_topk1_and_tiny_topp_are_argmax():
+    """Degenerate filters collapse onto greedy: top_k=1 or a vanishing
+    nucleus keep exactly the argmax token regardless of temperature."""
+    from repro.serving import sample_tokens
+    logits = jax.random.normal(jax.random.PRNGKey(0), (4, 33))
+    greedy = np.argmax(np.asarray(logits), -1)
+    keys = np.tile(np.asarray(jax.random.PRNGKey(5), np.uint32), (4, 1))
+    steps = np.arange(4, dtype=np.int32)
+    for kw in ({"top_k": 1}, {"top_p": 1e-7}):
+        got = sample_tokens(
+            logits, jnp.asarray(keys), jnp.asarray(steps),
+            jnp.full((4,), 1.7, jnp.float32),
+            jnp.full((4,), kw.get("top_k", 0), jnp.int32),
+            jnp.full((4,), kw.get("top_p", 1.0), jnp.float32))
+        assert (np.asarray(got) == greedy).all(), kw
 
 
 # ==========================================================================
@@ -219,11 +435,14 @@ def test_telemetry_report_fields():
 
 
 def test_telemetry_log_sums_replica_rows():
-    """Default reducer sums a stacked per-replica stats matrix."""
+    """Default reducer sums a stacked per-replica stats matrix (all six
+    STATS_FIELDS, including the chunk and sampler counters)."""
     log = TelemetryLog()
-    s = log.step(0, np.array([[1, 2, 3, 0], [4, 1, 2, 1]], np.float32))
-    assert (s.queue_depth, s.active_slots, s.new_tokens, s.prefills) \
-        == (5.0, 3.0, 5.0, 1.0)
+    s = log.step(0, np.array([[1, 2, 3, 0, 2, 1], [4, 1, 2, 1, 0, 2]],
+                             np.float32))
+    assert (s.queue_depth, s.active_slots, s.new_tokens, s.prefills,
+            s.prefill_chunks, s.sampled_tokens) \
+        == (5.0, 3.0, 5.0, 1.0, 2.0, 3.0)
 
 
 # ==========================================================================

@@ -1,15 +1,27 @@
-"""Execute every ```python code block in the documentation.
+"""Execute every ```python code block in the documentation, then check links.
 
-Part of ``make verify``: README.md, DESIGN.md, and docs/*.md promise
-runnable examples, so this script extracts each fenced ```python block and
-executes it. The page list is a glob, not a hard-coded list — a new
-docs/*.md page is gated the moment it exists. Blocks within one file share
-a namespace (later blocks may use earlier imports) and execute in order;
-files are independent. Non-python fences (```bash, ```text, ...) are
-skipped — use them for anything not meant to run.
+Part of ``make verify``: README.md, DESIGN.md, EXPERIMENTS.md, and
+docs/*.md promise runnable examples, so this script extracts each fenced
+```python block and executes it. The page list is a glob, not a hard-coded
+list — a new docs/*.md page is gated the moment it exists. Blocks within
+one file share a namespace (later blocks may use earlier imports) and
+execute in order; files are independent. Non-python fences (```bash,
+```text, ...) are skipped — use them for anything not meant to run.
+
+The **docs-links** pass then fails on dangling intra-repo references in the
+same page set:
+
+* markdown links ``[text](relative/path)`` whose target file does not
+  exist (external ``http(s)://`` and in-page ``#anchor`` links are
+  skipped);
+* section references of the form ``DESIGN.md §4`` / ``EXPERIMENTS.md
+  §Perf`` (backticks/parens tolerated) whose target file has no matching
+  ``## §<id>`` heading — the cross-page contract that keeps e.g.
+  docs/serving.md ↔ DESIGN.md §4 honest.
 
 Usage:  PYTHONPATH=src python tools/check_docs.py [files...]
-        (no args: README.md + DESIGN.md + docs/*.md from the repo root)
+        (no args: README.md + DESIGN.md + EXPERIMENTS.md + docs/*.md)
+        --links-only skips block execution (fast CI pre-pass).
 """
 
 from __future__ import annotations
@@ -21,10 +33,15 @@ import sys
 import traceback
 
 FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s#]+)(?:#[^)\s]*)?\)")
+# "DESIGN.md §4", "`EXPERIMENTS.md` §Perf", "(see DESIGN.md §5)" ...
+SECT_REF = re.compile(r"`?([\w./-]+\.md)`?\s*§\s*([\w-]+)")
+HEADING = re.compile(r"^#+\s*§\s*([\w-]+)", re.M)
 
 
 def doc_files(root: str) -> list:
-    out = [os.path.join(root, "README.md"), os.path.join(root, "DESIGN.md")]
+    out = [os.path.join(root, "README.md"), os.path.join(root, "DESIGN.md"),
+           os.path.join(root, "EXPERIMENTS.md")]
     out += sorted(glob.glob(os.path.join(root, "docs", "*.md")))
     return [f for f in out if os.path.exists(f)]
 
@@ -51,15 +68,69 @@ def run_file(path: str) -> int:
     return 0
 
 
+def _strip_fences(text: str) -> str:
+    """Drop fenced code blocks: paths inside code are examples, not links."""
+    return re.sub(r"^```.*?^```\s*$", "", text, flags=re.M | re.S)
+
+
+def _section_ids(path: str) -> set:
+    with open(path) as f:
+        return set(HEADING.findall(f.read()))
+
+
+def check_links(root: str, files: list) -> int:
+    """Fail on dangling intra-repo links / §-references (see module doc)."""
+    rc = 0
+    sections: dict = {}
+    for path in files:
+        with open(path) as f:
+            prose = _strip_fences(f.read())
+        base = os.path.dirname(path)
+        for m in MD_LINK.finditer(prose):
+            target = m.group(1)
+            if "://" in target or target.startswith("mailto:"):
+                continue
+            cand = os.path.normpath(os.path.join(base, target))
+            if not os.path.exists(cand):
+                print(f"FAIL {path}: dangling link -> {target}",
+                      file=sys.stderr)
+                rc = 1
+        for m in SECT_REF.finditer(prose):
+            ref_file, sect = m.group(1), m.group(2)
+            cand = os.path.normpath(os.path.join(base, ref_file))
+            if not os.path.exists(cand):
+                cand = os.path.normpath(os.path.join(root, ref_file))
+            if not os.path.exists(cand):
+                print(f"FAIL {path}: §-reference to missing file "
+                      f"{ref_file}", file=sys.stderr)
+                rc = 1
+                continue
+            if cand not in sections:
+                sections[cand] = _section_ids(cand)
+            if not sections[cand]:
+                continue            # referenced file doesn't use § headings
+            if sect not in sections[cand]:
+                print(f"FAIL {path}: {ref_file} has no '§{sect}' heading",
+                      file=sys.stderr)
+                rc = 1
+    print("docs links:", "FAILED" if rc else "PASSED",
+          f"({len(files)} files)")
+    return rc
+
+
 def main(argv=None) -> int:
     args = list(argv if argv is not None else sys.argv[1:])
+    links_only = "--links-only" in args
+    args = [a for a in args if a != "--links-only"]
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     files = args or doc_files(root)
     rc = 0
-    for path in files:
-        rc |= run_file(path)
-    print("docs check:", "FAILED" if rc else "PASSED",
-          f"({len(files)} files)")
+    if not links_only:
+        for path in files:
+            rc |= run_file(path)
+        print("docs check:", "FAILED" if rc else "PASSED",
+              f"({len(files)} files)")
+    rc |= check_links(root, files)
     return rc
 
 
