@@ -3,12 +3,17 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test docs-check docs-links bench bench-collectives \
-	bench-serving
+.PHONY: verify test test-fast docs-check docs-links bench \
+	bench-collectives bench-serving
 
 verify:
 	$(PY) -m pytest -x -q
 	$(PY) tools/check_docs.py
+
+# inner-loop signal: skip the `slow`-marked hypothesis-heavy / multi-device
+# tests (tier-1 `make verify` always runs everything)
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
 
 docs-check:
 	$(PY) tools/check_docs.py

@@ -47,6 +47,7 @@ __all__ = [
     "default_cache_path",
     "get_cache",
     "reset_cache",
+    "set_cache_path",
 ]
 
 _ALGORITHMS = ("dptree", "sptree", "redbcast", "ring")
@@ -73,7 +74,26 @@ def _key(p: int, nbytes: int, dtype: str, topology: str) -> str:
     return f"p={int(p)}/nbytes={int(nbytes)}/dtype={dtype}/topo={topology}"
 
 
+# Explicit path override (the CLI `--autotune-cache` flag); takes precedence
+# over the REPRO_AUTOTUNE_CACHE env var, which stays the deployment-level
+# default. Per-deployment cache files are the ROADMAP's "persist per-mesh
+# caches per deployment" remainder: two meshes sharing one home directory
+# (e.g. two pod slices launched from the same image) would otherwise
+# overwrite each other's measured winners on key collisions.
+_PATH_OVERRIDE: str | None = None
+
+
+def set_cache_path(path: str | None) -> None:
+    """Install (or with None, clear) the process-wide cache-path override
+    and drop the cached handle so the next consult reloads from it."""
+    global _PATH_OVERRIDE
+    _PATH_OVERRIDE = path
+    reset_cache()
+
+
 def default_cache_path() -> str:
+    if _PATH_OVERRIDE:
+        return _PATH_OVERRIDE
     env = os.environ.get("REPRO_AUTOTUNE_CACHE")
     if env:
         return env

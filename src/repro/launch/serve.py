@@ -16,6 +16,13 @@ per tick) and seeded nucleus sampling:
       --continuous --requests 6 --slots 3 --prompt-len 20 80 \
       --prefill-chunk 16 --temperature 0.9 --top-p 0.85
 
+Speculative decoding (docs/speculative.md) emits up to --draft-k+1 tokens
+per tick with bit-identical streams — n-gram self-drafting by default,
+or a second reduced model via --draft-model:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch minicpm_2b --reduced \
+      --speculate --draft-k 4 --requests 8 --slots 4
+
 Legacy fixed-batch demo (every row decodes in lockstep from an empty cache):
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite_3_8b --reduced \
@@ -39,60 +46,93 @@ from repro.models import transformer as tf
 
 def synthetic_workload(n: int, vocab: int, *, gap: int = 2, seed: int = 0,
                        prompt_lens=(3, 12), max_new=(4, 24),
-                       sampling=None) -> list:
+                       sampling=None, spec=None, repetitive=False) -> list:
     """Deterministic staggered-arrival request stream (bench + CLI).
 
     ``sampling`` is a base :class:`~repro.serving.sampling.SamplingParams`
     or None (greedy). Each request gets its own seed (``base seed + rid``)
-    so streams differ per request but reproduce run-to-run.
+    so streams differ per request but reproduce run-to-run. ``spec`` is a
+    :class:`~repro.serving.speculative.SpecParams` every request carries
+    (None = plain decoding). ``repetitive=True`` cycles each prompt over a
+    tiny per-request token alphabet instead of sampling i.i.d. — the
+    structured-text stand-in the prompt-lookup drafter can actually draft
+    from (an i.i.d. prompt has no recurring n-grams by construction).
     """
     import dataclasses as _dc
 
     from repro.serving import Request
     rng = np.random.default_rng(seed)
+
+    def prompt(plen):
+        if not repetitive:
+            return tuple(int(t) for t in rng.integers(1, vocab, plen))
+        period = rng.integers(1, vocab, int(rng.integers(2, 5)))
+        return tuple(int(period[j % len(period)]) for j in range(plen))
+
     return [
         Request(i,
-                tuple(int(t) for t in rng.integers(
-                    1, vocab, int(rng.integers(prompt_lens[0],
-                                               prompt_lens[1] + 1)))),
+                prompt(int(rng.integers(prompt_lens[0],
+                                        prompt_lens[1] + 1))),
                 max_new_tokens=int(rng.integers(max_new[0], max_new[1] + 1)),
                 arrival=i * gap,
                 sampling=(None if sampling is None else
-                          _dc.replace(sampling, seed=sampling.seed + i)))
+                          _dc.replace(sampling, seed=sampling.seed + i)),
+                spec=spec)
         for i in range(n)
     ]
 
 
 def serve_continuous(args):
     """Drive the continuous-batching engine on a synthetic workload."""
-    from repro.serving import SamplingParams, ServingEngine, \
-        make_stats_reducer
+    from repro.serving import (DraftModelDrafter, SamplingParams,
+                               ServingEngine, SpecParams,
+                               make_stats_reducer)
     mesh_shape = tuple(int(x) for x in args.mesh.split("x"))
     axes = ("data", "model")[-len(mesh_shape):]
     mesh = make_mesh(mesh_shape, axes)
     cfg = get_config(args.arch, reduced=args.reduced)
     pcfg = get_parallel(args.arch)
     params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
+    drafter = None
+    if args.draft_model:
+        dcfg = get_config(args.draft_model, reduced=True)
+        if dcfg.vocab_size != cfg.vocab_size:
+            raise SystemExit(
+                f"--draft-model {args.draft_model}: vocab "
+                f"{dcfg.vocab_size} != target vocab {cfg.vocab_size}")
+        dparams = tf.init_params(jax.random.PRNGKey(args.seed + 7), dcfg)
+        drafter = DraftModelDrafter(dcfg, dparams, mesh,
+                                    n_slots=args.slots,
+                                    max_len=args.cache_len)
     # per-tick stats cross the replica axis on the b=1 dual-root tree
     # (host-side sum on a 1-wide axis)
     engine = ServingEngine(cfg, pcfg, mesh, params, n_slots=args.slots,
                            max_len=args.cache_len,
                            prefill_chunk=args.prefill_chunk,
-                           stats_reducer=make_stats_reducer(mesh))
+                           stats_reducer=make_stats_reducer(mesh),
+                           drafter=drafter)
     sampling = None
     if args.temperature > 0:
         sampling = SamplingParams(temperature=args.temperature,
                                   top_k=args.top_k, top_p=args.top_p,
                                   seed=args.sample_seed)
+    spec = None
+    if args.speculate or args.draft_model:
+        spec = SpecParams(draft_k=args.draft_k)
     reqs = synthetic_workload(args.requests, cfg.vocab_size,
                               gap=args.arrival_gap, seed=args.seed + 1,
                               prompt_lens=tuple(args.prompt_len),
-                              sampling=sampling)
+                              sampling=sampling, spec=spec,
+                              repetitive=spec is not None
+                              and not args.draft_model)
     report = engine.run(reqs, static=args.static)
+    spec_note = (f", {report['accepted_tokens']}/"
+                 f"{report['drafted_tokens']} drafts accepted"
+                 if report["drafted_tokens"] else "")
     print(f"[{report['mode']}] {report['requests']} requests, "
           f"{report['total_tokens']} tokens "
           f"({report['sampled_tokens']} sampled, "
-          f"{report['prefill_chunks']} prefill chunks) "
+          f"{report['prefill_chunks']} prefill chunks{spec_note}) "
           f"in {report['wall_s']:.2f}s "
           f"({report['tok_s']:.1f} tok/s, {report['ticks']} ticks, "
           f"ttft p50 {report['ttft_ticks_p50']:.1f} ticks, "
@@ -186,10 +226,54 @@ def main(argv=None):
     ap.add_argument("--sample-seed", type=int, default=0,
                     help="continuous mode: base sampler seed (request i "
                          "uses seed+i; streams reproduce run-to-run)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="continuous mode: speculative decoding with the "
+                         "prompt-lookup (n-gram) self-drafter — several "
+                         "tokens per tick, streams bit-identical")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="continuous mode: max draft tokens per verify "
+                         "tick (1..MAX_DRAFT_K)")
+    ap.add_argument("--draft-model", default=None,
+                    help="continuous mode: draft with this REDUCED arch as "
+                         "the draft model instead of prompt lookup "
+                         "(implies --speculate; vocab must match)")
+    ap.add_argument("--autotune-cache", default=None, metavar="PATH",
+                    help="per-deployment autotune cache file; overrides "
+                         "REPRO_AUTOTUNE_CACHE and the XDG default (what "
+                         "the b=1 stats reduction's method='auto' consults)")
     args = ap.parse_args(argv)
-    if args.continuous or args.static:
+    _validate_args(ap, args)
+    if args.autotune_cache:
+        from repro.core import autotune
+        autotune.set_cache_path(args.autotune_cache)
+    if args.continuous or args.static or args.speculate or args.draft_model:
         return serve_continuous(args)
     return serve_loop(args)
+
+
+def _validate_args(ap, args) -> None:
+    """Reject bad flag values BEFORE any engine/jit work: a broken value
+    that only explodes once a step is traced costs minutes of compile on a
+    real mesh and produces an opaque XLA error instead of a usage line."""
+    from repro.serving.speculative import MAX_DRAFT_K
+    if args.prefill_chunk is not None and args.prefill_chunk < 1:
+        ap.error(f"--prefill-chunk must be >= 1, got {args.prefill_chunk}")
+    if args.arrival_gap < 0:
+        ap.error(f"--arrival-gap must be >= 0, got {args.arrival_gap}")
+    if args.requests < 1:
+        ap.error(f"--requests must be >= 1, got {args.requests}")
+    if args.slots < 1:
+        ap.error(f"--slots must be >= 1, got {args.slots}")
+    lo, hi = args.prompt_len
+    if lo < 1 or hi < lo:
+        ap.error(f"--prompt-len needs 1 <= MIN <= MAX, got {lo} {hi}")
+    if not 1 <= args.draft_k <= MAX_DRAFT_K:
+        ap.error(f"--draft-k must be in [1, {MAX_DRAFT_K}], "
+                 f"got {args.draft_k}")
+    if args.batch < 1:
+        ap.error(f"--batch must be >= 1, got {args.batch}")
+    if args.cache_len < 1:
+        ap.error(f"--cache-len must be >= 1, got {args.cache_len}")
 
 
 if __name__ == "__main__":

@@ -237,7 +237,8 @@ def make_train_step(cfg, pcfg: ParallelConfig, mesh,
 # --------------------------------------------------------------------------
 
 def make_prefill_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
-                      into_slots: bool = False):
+                      into_slots: bool = False, donate: bool = True,
+                      ring_slack: int = 0):
     """Prefill step builder, two regimes:
 
     * ``into_slots=False`` — full-sequence forward + last-position logits
@@ -268,7 +269,7 @@ def make_prefill_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
     if into_slots:
         from repro.serving.sampling import sample_tokens
         cspecs = cache_pspecs(cfg, mesh, suite.global_batch, suite.seq_len,
-                              per_slot=True)
+                              per_slot=True, ring_slack=ring_slack)
 
         def _prefill_fwd(params, tokens, caches, slot, length, resume):
             from repro.models.layers import mesh_ctx
@@ -279,7 +280,8 @@ def make_prefill_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
                             full, slot, 1, axis=1), caches)
                 else:
                     row_in = tf.init_cache(cfg, 1, suite.seq_len,
-                                           per_slot=True)
+                                           per_slot=True,
+                                           ring_slack=ring_slack)
                 logits, row = tf.prefill_step(
                     params, cfg, {"tokens": tokens}, row_in,
                     length.reshape(1), jnp.ones((1,), bool), resume=resume)
@@ -308,7 +310,11 @@ def make_prefill_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
             return tok, out
 
         # greedy (the default) compiles without the sampler pipeline;
-        # sampled variants compile lazily on first sampled admission
+        # sampled variants compile lazily on first sampled admission.
+        # ``donate=False`` keeps the input caches alive past the call — the
+        # draft-model drafter snapshots its caches before proposing and
+        # restores them on rejection, which donation would invalidate.
+        dn = (2,) if donate else ()
         jitted = {}
         for resume in (False, True):
             jitted[resume, False] = jax.jit(
@@ -317,14 +323,14 @@ def make_prefill_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
                               _named(mesh, cspecs), None, None),
                 out_shardings=(NamedSharding(mesh, P()),
                                _named(mesh, cspecs)),
-                donate_argnums=(2,))
+                donate_argnums=dn)
             jitted[resume, True] = jax.jit(
                 functools.partial(sampled_body, resume=resume),
                 in_shardings=(_named(mesh, pspecs), None,
                               _named(mesh, cspecs), None, None, None),
                 out_shardings=(NamedSharding(mesh, P()),
                                _named(mesh, cspecs)),
-                donate_argnums=(2,))
+                donate_argnums=dn)
 
         def step(params, tokens, caches, slot, length, *, resume=False,
                  sampling_row=None):
@@ -349,7 +355,7 @@ def make_prefill_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
 
 
 def cache_pspecs(cfg, mesh, batch: int, max_len: int = 8,
-                 per_slot: bool = False) -> Any:
+                 per_slot: bool = False, ring_slack: int = 0) -> Any:
     """Sharding for the stacked KV/state caches.
 
     Shard batch over the DP axes when divisible; otherwise (long-context B=1)
@@ -360,7 +366,7 @@ def cache_pspecs(cfg, mesh, batch: int, max_len: int = 8,
     n_dp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
     shard_batch = bool(dp) and batch % n_dp == 0 and batch >= n_dp
     caches = tf.init_cache(cfg, batch, max_len, abstract=True,
-                           per_slot=per_slot)
+                           per_slot=per_slot, ring_slack=ring_slack)
 
     def spec(leaf):
         nd = leaf.ndim
@@ -383,7 +389,8 @@ def cache_pspecs(cfg, mesh, batch: int, max_len: int = 8,
 
 
 def make_serve_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
-                    slots: bool = False):
+                    slots: bool = False, donate: bool = True,
+                    ring_slack: int = 0):
     """Returns (jitted_step, shardings).
 
     ``slots=False``: step(params, inputs, caches) -> (logits, new_caches) —
@@ -404,7 +411,7 @@ def make_serve_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
     pspecs = (fsdp_pspecs(cfg, mesh) if pcfg.dp_mode == "fsdp"
               else model_pspecs(cfg, mesh))
     cspecs = cache_pspecs(cfg, mesh, suite.global_batch, suite.seq_len,
-                          per_slot=slots)
+                          per_slot=slots, ring_slack=ring_slack)
     dp = _dp_axes(mesh)
     n_dp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
     shard_batch = dp and suite.global_batch % max(n_dp, 1) == 0 \
@@ -438,16 +445,17 @@ def make_serve_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
         # whose greedy rows still take the identical argmax inside
         # sample_tokens, so mixing policies never changes greedy streams
         out_sh = (NamedSharding(mesh, bspec), _named(mesh, cspecs))
+        dn = (2,) if donate else ()       # see make_prefill_step on donate
         greedy_step = jax.jit(
             greedy_body,
             in_shardings=(_named(mesh, pspecs), None, _named(mesh, cspecs),
                           None),
-            out_shardings=out_sh, donate_argnums=(2,))
+            out_shardings=out_sh, donate_argnums=dn)
         sampled_step = jax.jit(
             sampled_body,
             in_shardings=(_named(mesh, pspecs), None, _named(mesh, cspecs),
                           None, None),
-            out_shardings=out_sh, donate_argnums=(2,))
+            out_shardings=out_sh, donate_argnums=dn)
 
         def step(params, inputs, caches, active, sampling=None):
             if sampling is None:
@@ -471,3 +479,98 @@ def make_serve_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
         out_shardings=(NamedSharding(mesh, bspec), _named(mesh, cspecs)),
         donate_argnums=(2,))
     return step, {"params": pspecs, "cache": cspecs, "batch": bspec}
+
+
+# --------------------------------------------------------------------------
+# speculative verify step
+# --------------------------------------------------------------------------
+
+def make_verify_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
+                     draft_k: int, ring_slack: int = 0):
+    """Returns (jitted_step, shardings) for one-pass speculative verification.
+
+    step(params, tokens, caches, active, n_draft, sampling=None) ->
+    (emitted (B, K+1) int32, accept (B,) int32, new_caches), with
+    ``tokens`` (B, K+1) int32 — per row, column 0 the request's last
+    emitted token and columns 1..n_draft[b] its draft proposals (the rest
+    padding) — against the serving engine's per-slot caches. The whole
+    accept/reject tick is ONE compiled call per active-slot batch:
+
+    * the stack scores all K+1 positions in a single forward
+      (:func:`repro.models.transformer.verify_forward` — attention slots
+      take the T>=1 query path, recurrent mixers run the exact token
+      recurrences with per-token state checkpoints);
+    * acceptance is the longest draft prefix matching the model's own
+      next-token choice per position — the bit-exact argmax for greedy
+      rows, or the request's committed ``fold_in(seed, token_index)``
+      sampler for sampled rows (``sampling`` as in ``make_serve_step``,
+      with ``sampling["step"]`` the first position's token index), so the
+      emitted stream is IDENTICAL to the non-speculative engine's under any
+      accept/reject schedule;
+    * the commit is rollback-safe: rejected ring writes are restored
+      bit-exact, positions advance by the accepted length only, recurrent
+      carries take the accepted length's checkpoint
+      (:func:`repro.models.transformer.commit_verify_caches`).
+
+    A row with ``n_draft == 0`` is exactly one decode step (accept == 1,
+    emitted[0] == the next token); inactive rows pass through untouched.
+    Compiled once per draft budget K = ``draft_k`` (the adaptive controller
+    varies the per-request k *within* K via ``n_draft``, never re-jitting).
+    ``ring_slack`` must match the caches' (window/chunk-bounded rings need
+    ``ring_slack >= draft_k`` — see ``init_cache``).
+    """
+    from repro.serving.sampling import sample_tokens_block
+    pspecs = (fsdp_pspecs(cfg, mesh) if pcfg.dp_mode == "fsdp"
+              else model_pspecs(cfg, mesh))
+    cspecs = cache_pspecs(cfg, mesh, suite.global_batch, suite.seq_len,
+                          per_slot=True, ring_slack=ring_slack)
+    T = draft_k + 1
+
+    def _verify(params, tokens, caches, active, n_draft, pred_fn):
+        from repro.models.layers import mesh_ctx
+        with mesh_ctx(mesh):
+            # columns past each row's own drafts are buffer padding: the
+            # lengths= machinery keeps their ring writes suppressed (a pad
+            # write can wrap over live K/V near ring capacity)
+            lengths = jnp.clip(n_draft, 0, T - 1).astype(jnp.int32) + 1
+            logits, raw = tf.verify_forward(params, cfg, {"tokens": tokens},
+                                            caches, lengths=lengths)
+            pred = pred_fn(logits)                             # (B, T) int32
+            emitted, accept = tf.verify_accept(pred, tokens, n_draft)
+            new_caches = tf.commit_verify_caches(raw, caches, T, accept,
+                                                 active)
+        return emitted, accept, new_caches
+
+    def greedy_body(params, tokens, caches, active, n_draft):
+        return _verify(params, tokens, caches, active, n_draft,
+                       lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
+
+    def sampled_body(params, tokens, caches, active, n_draft, sampling):
+        def pred_fn(lg):
+            return sample_tokens_block(lg, sampling["key"], sampling["step"],
+                                       sampling["temperature"],
+                                       sampling["top_k"], sampling["top_p"])
+        return _verify(params, tokens, caches, active, n_draft, pred_fn)
+
+    # the same greedy/sampled split as make_serve_step: the default path
+    # never compiles the sampler's full-vocab sorts
+    out_sh = (NamedSharding(mesh, P()), NamedSharding(mesh, P()),
+              _named(mesh, cspecs))
+    greedy_step = jax.jit(
+        greedy_body,
+        in_shardings=(_named(mesh, pspecs), None, _named(mesh, cspecs),
+                      None, None),
+        out_shardings=out_sh, donate_argnums=(2,))
+    sampled_step = jax.jit(
+        sampled_body,
+        in_shardings=(_named(mesh, pspecs), None, _named(mesh, cspecs),
+                      None, None, None),
+        out_shardings=out_sh, donate_argnums=(2,))
+
+    def step(params, tokens, caches, active, n_draft, sampling=None):
+        if sampling is None:
+            return greedy_step(params, tokens, caches, active, n_draft)
+        return sampled_step(params, tokens, caches, active, n_draft,
+                            sampling)
+
+    return step, {"params": pspecs, "cache": cspecs}

@@ -231,8 +231,16 @@ def main(argv=None):
                     help="before step 0, measure the collective candidates at "
                          "the actual gradient bucket sizes on this mesh and "
                          "cache the winners for method='auto'")
+    ap.add_argument("--autotune-cache", default=None, metavar="PATH",
+                    help="per-deployment autotune cache file; overrides "
+                         "REPRO_AUTOTUNE_CACHE and the XDG default — both "
+                         "the warm-up's writes and method='auto' consults "
+                         "go through it (one file per mesh/deployment)")
     ap.add_argument("--max-restarts", type=int, default=3)
     args = ap.parse_args(argv)
+    if args.autotune_cache:
+        from repro.core import autotune
+        autotune.set_cache_path(args.autotune_cache)
 
     out = run_with_restarts(lambda attempt: train_loop(args),
                             max_restarts=args.max_restarts)

@@ -516,6 +516,29 @@ def attention_decode_slots(p: Params, cfg: AttnConfig, x: jax.Array,
     return out, new_cache
 
 
+def ring_restore_mask(cache_pos: jax.Array, S: int, n_call: int,
+                      accept: jax.Array) -> jax.Array:
+    """Which ring slots a partially-rejected verify call must roll back.
+
+    A speculative verify call writes ``n_call`` tokens of row ``b`` at ring
+    slots ``(cache_pos[b] + t) % S`` (``attention_decode_slots`` semantics,
+    ``n_call <= S``). Once acceptance is known, only tokens
+    ``t < accept[b]`` may stay: a REJECTED token's write must be restored to
+    the pre-call value, because on a wrapped ring (sliding-window caches
+    with more than ``S`` tokens decoded) it can land on a slot holding live
+    earlier K/V that position arithmetic still reads as valid after the
+    position is rewound — the same hazard the ``lengths=`` pad-write
+    suppression closes for resumed prefill chunks, resolved after the fact
+    here because acceptance is only known once the pass is scored.
+
+    cache_pos: (..., B) int32 PRE-call positions; accept: (B,) int32 in
+    ``[1, n_call]``. Returns bool (..., B, S): True where the slot was
+    written by a rejected token and must take the old cache value.
+    """
+    t = jnp.mod(jnp.arange(S, dtype=jnp.int32) - cache_pos[..., None], S)
+    return (t >= accept[:, None]) & (t < n_call)
+
+
 def attention_decode_partials(p: Params, cfg: AttnConfig, x: jax.Array,
                               cache_k: jax.Array, cache_v: jax.Array,
                               cache_pos: jax.Array, shard_start: jax.Array):

@@ -109,7 +109,7 @@ def _tmix_inputs(p: Params, x: jax.Array, shifted: jax.Array, cfg: RWKVConfig):
     return r, k, v, g, w_log
 
 
-def wkv_recurrent(r, k, v, w_log, u, state, valid=None):
+def wkv_recurrent(r, k, v, w_log, u, state, valid=None, collect=False):
     """Exact recurrence. r/k/v/w_log: (B,T,H,K); u: (H,K); state: (B,H,K,K).
 
     S_t = diag(w_t) S_{t-1} + k_t (x) v_t ;  o_t = r_t . (S_{t-1} + diag(u) k_t (x) v_t)
@@ -121,6 +121,13 @@ def wkv_recurrent(r, k, v, w_log, u, state, valid=None):
     prefill relies on (the pad outputs are still computed; callers discard
     them). Because the carry is per-token either way, splitting a sequence
     across calls (chunked prefill) reproduces the one-shot states exactly.
+
+    ``collect=True`` returns ``(o, states)`` with the EVERY-step states
+    stacked on a token axis: ``states[:, t]`` is S after consuming token
+    ``t`` (so ``states[:, -1]`` equals the normal ``new_state``). The
+    speculative-decoding verify step uses this to roll the slot back to the
+    state at the ACCEPTED length, which is only known after the whole pass
+    has been scored.
     """
     w = jnp.exp(w_log.astype(jnp.float32))
 
@@ -130,7 +137,7 @@ def wkv_recurrent(r, k, v, w_log, u, state, valid=None):
         o = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
         S_new = w_t[..., None] * S + kv
         S = jnp.where(m_t[:, None, None, None], S_new, S)
-        return S, o
+        return S, (S, o) if collect else o
 
     if valid is None:
         valid = jnp.ones(r.shape[:2], bool)
@@ -138,6 +145,10 @@ def wkv_recurrent(r, k, v, w_log, u, state, valid=None):
                        for t in (r, k, v, w))
     ms = jnp.moveaxis(valid, 1, 0)
     state, out = jax.lax.scan(step, state, (rs, ks_, vs, ws, ms))
+    if collect:
+        states, out = out
+        return (jnp.moveaxis(out, 0, 1).astype(r.dtype),
+                jnp.moveaxis(states, 0, 1))
     return jnp.moveaxis(out, 0, 1).astype(r.dtype), state
 
 
@@ -199,7 +210,8 @@ def _checkpoint_row(seq: jax.Array, lengths: jax.Array | None) -> jax.Array:
 
 def rwkv_block(p: Params, x: jax.Array, cfg: RWKVConfig,
                cache: Params | None = None, use_chunked: bool = True,
-               lengths: jax.Array | None = None):
+               lengths: jax.Array | None = None,
+               collect_states: bool = False):
     """Full RWKV6 block (time mix + channel mix) with optional decode cache.
 
     cache = {"shift1": (B,1,D), "shift2": (B,1,D), "state": (B,H,K,K)}.
@@ -212,6 +224,17 @@ def rwkv_block(p: Params, x: jax.Array, cfg: RWKVConfig,
     ``T-1``. This path always runs the exact token recurrence (never the
     chunkwise form), so splitting a prompt across successive calls with the
     carried cache is bit-identical to one call over the whole prompt.
+
+    ``collect_states=True`` (speculative verify; requires a cache) also
+    runs the exact recurrence, but the returned cache carries a per-TOKEN
+    checkpoint axis right after batch: leaf ``[:, t]`` is the cache as if
+    the call had ended at token ``t`` (``shift1``/``shift2``: (B,T,1,D);
+    ``state``: (B,T,H,K,K)). The caller gathers the accepted length's
+    entry once acceptance is known — rejected draft tokens then leave the
+    carry bit-unchanged, the same invariant ``lengths`` gives prefill,
+    just resolved after the fact. The two compose: with both set, tokens
+    past ``lengths`` are verify-buffer padding whose checkpoints are
+    frozen (acceptance never reaches them).
     """
     B, T, D = x.shape
     H, K = cfg.n_heads, cfg.head_dim
@@ -223,7 +246,13 @@ def rwkv_block(p: Params, x: jax.Array, cfg: RWKVConfig,
     state = (cache["state"] if cache else
              jnp.zeros((B, H, K, K), jnp.float32))
     u = tm["u"].astype(jnp.float32)
-    if lengths is not None:
+    states_all = None
+    if collect_states:
+        valid = (None if lengths is None else
+                 jnp.arange(T, dtype=jnp.int32)[None] < lengths[:, None])
+        o, states_all = wkv_recurrent(r, k, v, w_log, u, state, valid=valid,
+                                      collect=True)
+    elif lengths is not None:
         valid = jnp.arange(T, dtype=jnp.int32)[None] < lengths[:, None]
         o, state = wkv_recurrent(r, k, v, w_log, u, state, valid=valid)
     elif T == 1 or not use_chunked or T % cfg.chunk_size != 0:
@@ -243,8 +272,14 @@ def rwkv_block(p: Params, x: jax.Array, cfg: RWKVConfig,
         * (kk @ cm["wv"].astype(x.dtype))
     x = x + cout
 
-    new_cache = {"shift1": _checkpoint_row(xn, lengths),
-                 "shift2": _checkpoint_row(xn2, lengths), "state": state}
+    if collect_states:
+        # per-token checkpoints: the shift carry after token t is simply the
+        # normed activation AT t, so the full (B,T,D) rows are the stack
+        new_cache = {"shift1": xn[:, :, None, :], "shift2": xn2[:, :, None, :],
+                     "state": states_all}
+    else:
+        new_cache = {"shift1": _checkpoint_row(xn, lengths),
+                     "shift2": _checkpoint_row(xn2, lengths), "state": state}
     return x, new_cache
 
 
@@ -344,7 +379,8 @@ def mamba_scan_chunked(dt, dtx, Bc, C, A, state, chunk: int):
     return jnp.moveaxis(ys, 0, 1).reshape(B, T, Di), state
 
 
-def mamba_scan_recurrent(dt, dtx, Bc, C, A, state, valid=None):
+def mamba_scan_recurrent(dt, dtx, Bc, C, A, state, valid=None,
+                         collect=False):
     """Exact token recurrence — op-for-op the T==1 decode step, scanned.
 
     Used by serving prefill: because the carry is advanced one token at a
@@ -354,6 +390,11 @@ def mamba_scan_recurrent(dt, dtx, Bc, C, A, state, valid=None):
     ``where`` so right-pad tokens leave the carry bit-unchanged. The
     chunkwise associative-scan form trades this exactness for MXU shape —
     its reduction tree depends on T, so it stays the training/one-shot path.
+
+    ``collect=True`` returns ``(y, states)`` with every step's state stacked
+    on a token axis (``states[:, t]`` = h after token ``t``) — the
+    speculative verify step gathers the accepted length's entry after
+    scoring (see :func:`wkv_recurrent`).
     """
     def step(h, inp):
         dt_t, dtx_t, b_t, c_t, m_t = inp
@@ -362,18 +403,22 @@ def mamba_scan_recurrent(dt, dtx, Bc, C, A, state, valid=None):
         h_new = jnp.exp(a0) * h + b0
         h = jnp.where(m_t[:, None, None], h_new, h)
         y = jnp.einsum("bdn,bn->bd", h_new, c_t)
-        return h, y
+        return h, (h, y) if collect else y
 
     if valid is None:
         valid = jnp.ones(dt.shape[:2], bool)
     seq = tuple(jnp.moveaxis(t, 1, 0) for t in (dt, dtx, Bc, C, valid))
     state, ys = jax.lax.scan(step, state, seq)
+    if collect:
+        states, ys = ys
+        return jnp.moveaxis(ys, 0, 1), jnp.moveaxis(states, 0, 1)
     return jnp.moveaxis(ys, 0, 1), state
 
 
 def mamba_block(p: Params, x: jax.Array, cfg: MambaConfig,
                 cache: Params | None = None,
-                lengths: jax.Array | None = None):
+                lengths: jax.Array | None = None,
+                collect_states: bool = False):
     """Mamba block with optional decode cache
     {"conv": (B, d_conv-1, Di), "ssm": (B, Di, N)}.
 
@@ -382,6 +427,13 @@ def mamba_block(p: Params, x: jax.Array, cfg: MambaConfig,
     state update is masked past ``lengths`` and the scan runs the exact
     token recurrence, and the depthwise-conv window is checkpointed at the
     true length (``xcat[:, len:len+d_conv-1]``, not the padded tail).
+
+    ``collect_states=True`` (speculative verify; requires a cache) runs the
+    exact recurrence and returns per-TOKEN cache checkpoints on an axis
+    after batch — ``conv``: (B,T,Kc-1,Di) with entry ``t`` the window
+    ending at token ``t``; ``ssm``: (B,T,Di,N) — so the caller can commit
+    the accepted length's state after scoring. Composes with ``lengths``
+    (verify-buffer padding) as in :func:`rwkv_block`.
     """
     B, T, D = x.shape
     Di, N, Kc = cfg.d_inner, cfg.d_state, cfg.d_conv
@@ -392,7 +444,13 @@ def mamba_block(p: Params, x: jax.Array, cfg: MambaConfig,
             jnp.zeros((B, Kc - 1, Di), x.dtype))
     xcat = jnp.concatenate([prev.astype(x.dtype), xin], axis=1)
     if Kc <= 1:
-        new_conv = prev
+        new_conv = (jnp.broadcast_to(prev[:, None], (B, T) + prev.shape[1:])
+                    if collect_states else prev)
+    elif collect_states:
+        # window ending at token t: xcat[t+1 : t+Kc) for every t at once
+        idx = (jnp.arange(T, dtype=jnp.int32)[:, None] + 1
+               + jnp.arange(Kc - 1, dtype=jnp.int32)[None])      # (T, Kc-1)
+        new_conv = xcat[:, idx]                                  # (B,T,Kc-1,Di)
     elif lengths is None:
         new_conv = xcat[:, -(Kc - 1):]
     else:
@@ -407,7 +465,13 @@ def mamba_block(p: Params, x: jax.Array, cfg: MambaConfig,
     dt, dtx, Bc, Cc = _mamba_inner(p, xc, cfg)
     A = -jnp.exp(p["A_log"])                       # (Di,N), negative
     state = (cache["ssm"] if cache else jnp.zeros((B, Di, N), jnp.float32))
-    if lengths is not None:
+    if collect_states:
+        valid = (None if lengths is None else
+                 jnp.arange(T, dtype=jnp.int32)[None] < lengths[:, None])
+        y, state = mamba_scan_recurrent(dt, dtx, Bc, Cc, A, state,
+                                        valid=valid,
+                                        collect=True)   # state: (B,T,Di,N)
+    elif lengths is not None:
         valid = jnp.arange(T, dtype=jnp.int32)[None] < lengths[:, None]
         y, state = mamba_scan_recurrent(dt, dtx, Bc, Cc, A, state,
                                         valid=valid)

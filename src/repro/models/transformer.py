@@ -351,7 +351,7 @@ def _moe_dispatch(p, x, cfg: ModelConfig):
 # --------------------------------------------------------------------------
 
 def _apply_sub(sp: Params, s: SubSpec, cfg: ModelConfig, x, positions,
-               memory, cache, lengths=None):
+               memory, cache, lengths=None, collect_states=False):
     """One sublayer; returns (x, aux_loss, new_cache).
 
     ``lengths`` (B,) activates the serving-prefill contract: the
@@ -361,11 +361,18 @@ def _apply_sub(sp: Params, s: SubSpec, cfg: ModelConfig, x, positions,
     WRITES and anchors read validity at the true last position — a fresh
     prefill's pads would only land in never-valid slots, but a RESUMED
     chunk's bucket can wrap the ring over live early-prompt K/V.
+
+    ``collect_states`` (speculative verify, decode caches only): the
+    recurrent mixers return per-TOKEN cache checkpoints instead of one
+    final carry, so the verify step can commit the accepted length's state
+    after scoring (see :func:`verify_step`). Attention is unaffected here —
+    its rollback is a post-hoc ring restore (:func:`commit_verify_caches`).
     """
     aux = jnp.zeros((), jnp.float32)
     if s.kind == "rwkv":
         x, new_cache = ssm.rwkv_block(sp, x, cfg.rwkv_cfg(), cache,
-                                      lengths=lengths)
+                                      lengths=lengths,
+                                      collect_states=collect_states)
         return x, aux, new_cache
     h = L.rmsnorm(sp["norm"], x)
     new_cache = cache
@@ -392,14 +399,15 @@ def _apply_sub(sp: Params, s: SubSpec, cfg: ModelConfig, x, positions,
         o, aux = fn(sp, h, cfg)
     elif s.kind == "mamba":
         o, new_cache = ssm.mamba_block(sp, h, cfg.mamba_cfg(), cache,
-                                       lengths=lengths)
+                                       lengths=lengths,
+                                       collect_states=collect_states)
     else:
         raise ValueError(s.kind)
     return x + o, aux, new_cache
 
 
 def _run_stack(layer_params, pattern, cfg: ModelConfig, x, positions,
-               memory=None, caches=None, lengths=None):
+               memory=None, caches=None, lengths=None, collect_states=False):
     """Scan over periods; returns (x, aux_sum, new_caches)."""
     decode = caches is not None
 
@@ -407,7 +415,9 @@ def _run_stack(layer_params, pattern, cfg: ModelConfig, x, positions,
     # would otherwise keep every sublayer's backward intermediates live at
     # once inside the scanned body.
     sub_fn = _apply_sub
-    if cfg.remat and not decode:
+    if collect_states:
+        sub_fn = functools.partial(_apply_sub, collect_states=True)
+    elif cfg.remat and not decode:
         policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
                   if cfg.remat_policy == "dots" else None)
         sub_fn = jax.checkpoint(_apply_sub, prevent_cse=False, policy=policy,
@@ -522,13 +532,25 @@ def loss_fn(params, cfg: ModelConfig, inputs, aux_weight: float = 0.01):
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                kv_dtype=jnp.bfloat16, abstract: bool = False,
-               per_slot: bool = False):
+               per_slot: bool = False, ring_slack: int = 0):
     """Stacked (n_periods, ...) cache pytree matching the scan layout.
 
     With ``per_slot=True`` the attention position counters are per batch row
     (shape ``(batch,)`` instead of scalar): each row is an independently
     paced KV-cache *slot* for the continuous-batching serving engine, and
     decode dispatches to the scatter-write slot path.
+
+    ``ring_slack`` widens window/chunk-BOUNDED rings (never full-attention
+    ones) by that many slots. One-token decode never needs it: writing
+    position ``p`` overwrites ``p - W``, exactly one past the window. A
+    T-token speculative verify call is different — its later writes land up
+    to T-1 slots further around the ring, overwriting window positions the
+    call's EARLIEST queries still read. With ``ring_slack >= T - 1`` every
+    in-call write lands on a slot whose old position is already outside
+    every in-call query's window, so the one-pass verify is bit-identical
+    to sequential decode on bounded rings too. The validity masks derive
+    windows from config, not ring size, so a wider ring changes no
+    read/write semantics — only how much history physically survives.
     """
     KV, dh = cfg.n_kv_heads, cfg.hdim
     pos_shape = (batch,) if per_slot else ()
@@ -539,9 +561,9 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         if s.kind == "attn":
             S = max_len
             if s.sliding_window is not None:
-                S = min(S, s.sliding_window)
+                S = min(S, s.sliding_window + ring_slack)
             if s.chunk_size is not None:
-                S = min(S, s.chunk_size)
+                S = min(S, s.chunk_size + ring_slack)
             if cfg.kv_quant:
                 return {"k": mk((batch, S, KV, dh), jnp.int8),
                         "v": mk((batch, S, KV, dh), jnp.int8),
@@ -654,6 +676,24 @@ def advance_pos(caches, active=None):
 # KV-cache slot ops (continuous-batching serving)
 # --------------------------------------------------------------------------
 
+def prefill_call_bound(cfg: ModelConfig, max_len: int) -> int:
+    """Longest single slot prefill/verify CALL the cache geometry allows:
+    every attention sublayer must fit the call's tokens in its (possibly
+    window/chunk-bounded) ring, or one call would write a ring slot twice.
+    The single source of this rule — the engine's per-call chunk bound and
+    the draft-model drafter's prefill chunking both derive from it, so
+    they can never disagree."""
+    s_min = max_len
+    for layer in cfg.pattern:
+        for s in layer:
+            if s.kind == "attn":
+                if s.sliding_window is not None:
+                    s_min = min(s_min, s.sliding_window)
+                if s.chunk_size is not None:
+                    s_min = min(s_min, s.chunk_size)
+    return s_min
+
+
 def supports_slot_serving(cfg: ModelConfig) -> bool:
     """Whether the continuous-batching engine can drive this architecture.
 
@@ -753,3 +793,121 @@ def prefill_step(params, cfg: ModelConfig, inputs, caches, lengths, active,
         else:
             out.append(new_c)
     return logits, tuple(out)
+
+
+# --------------------------------------------------------------------------
+# speculative decoding: one-pass verify + rollback-safe commit
+# --------------------------------------------------------------------------
+
+def supports_speculation(cfg: ModelConfig) -> bool:
+    """Whether the speculative-decoding verify step can drive this arch.
+
+    Requires slot serving plus a rollback rule for every cached sublayer
+    kind: attention rings roll back by restoring rejected-slot writes and
+    rewinding ``pos`` (:func:`commit_verify_caches`); mamba/rwkv expose the
+    exact token recurrence with per-token state collection, so the carry at
+    the accepted length is available after scoring. All current kinds
+    qualify — the gate exists so a future cache kind without an exact
+    per-token checkpoint fails loudly instead of committing rejected state.
+    """
+    return (supports_slot_serving(cfg)
+            and set(cache_layer_kinds(cfg)) <= {"attn", "mamba", "rwkv"})
+
+
+def verify_forward(params, cfg: ModelConfig, inputs, caches, lengths=None):
+    """Score a verify call's tokens in ONE pass against per-slot caches.
+
+    inputs: {'tokens': (B, T)} — per row, token 0 is the request's last
+    emitted (not yet cached) token, tokens ``1..lengths[b]-1`` its draft
+    proposals, and the rest buffer padding (every row shares the compiled
+    width T). ``lengths`` (B,) int32 routes the padding through the SAME
+    pad-suppression machinery bucketed prefill uses: pad columns write
+    nothing to the attention rings — without this a row near its ring
+    capacity would let pad writes wrap over live prompt K/V and corrupt
+    the REAL columns' logits mid-call, silently breaking bit-identity —
+    and leave the recurrent per-token checkpoints frozen past the real
+    drafts. Returns (logits (B, T, V) float32 — position ``t`` scores the
+    model's next-token distribution AFTER consuming input token ``t`` —
+    and the RAW caches: attention rings with the real columns' writes
+    applied (positions not yet advanced) and recurrent leaves carrying a
+    per-token checkpoint axis). The raw caches are NOT safe to serve
+    from — they contain speculative writes — and must go through
+    :func:`commit_verify_caches` with the accepted lengths.
+    """
+    x, _ = embed_inputs(params, cfg, inputs)
+    x, _, raw = _run_stack(params["layers"], cfg.pattern, cfg, x, None,
+                           None, caches, lengths=lengths,
+                           collect_states=True)
+    x = L.rmsnorm(params["final_norm"], x)
+    return unembed(params, cfg, x).astype(jnp.float32), raw
+
+
+def commit_verify_caches(raw_caches, old_caches, n_call: int, accept,
+                         active):
+    """Commit exactly the accepted prefix of a verify call, per slot.
+
+    ``accept`` (B,) int32 in ``[1, n_call]``: how many of this call's input
+    tokens each row keeps (the matched drafts plus the always-committed
+    position-0 token). Attention rings: ring slots written by rejected
+    tokens are restored bit-exact from ``old_caches``
+    (:func:`repro.models.layers.ring_restore_mask` — no live ring write can
+    survive a rejection) and ``pos`` advances by ``accept`` only; recurrent
+    leaves gather the per-token checkpoint at ``accept - 1``, i.e. the
+    carry as produced by the exact token recurrences at the accepted
+    length. Rows where ``active`` is False keep their old caches
+    bit-unchanged (same contract as :func:`decode_step`).
+    """
+    committed = []
+    for new_c, old_c in zip(raw_caches, old_caches):
+        if isinstance(new_c, dict) and "pos" in new_c:
+            S = old_c["k"].shape[2]
+            restore = L.ring_restore_mask(old_c["pos"], S, n_call, accept)
+
+            def fix(nv, ov, _m=restore):
+                m = _m.reshape(_m.shape + (1,) * (nv.ndim - _m.ndim))
+                return jnp.where(m, ov, nv)
+
+            c = {k: fix(new_c[k], old_c[k]) for k in new_c if k != "pos"}
+            c["pos"] = old_c["pos"] + jnp.where(active[None], accept[None], 0)
+            committed.append(c)
+        else:
+            # recurrent leaves: (n_periods, B, T, ...) -> entry accept-1
+            def gather(nv):
+                idx = jnp.clip(accept - 1, 0).reshape(
+                    (1, -1) + (1,) * (nv.ndim - 2)).astype(jnp.int32)
+                shape = nv.shape[:2] + (1,) + nv.shape[3:]
+                took = jnp.take_along_axis(
+                    nv, jnp.broadcast_to(idx, shape), axis=2)
+                return took[:, :, 0]
+
+            committed.append(jax.tree.map(gather, new_c))
+    return merge_cache_rows(tuple(committed), old_caches, active)
+
+
+def verify_accept(pred, tokens, n_draft):
+    """Longest-matching-prefix acceptance for one verify call.
+
+    pred: (B, T) int32 — the committed sampler's (or argmax's) token after
+    each input position; tokens: (B, T) the call inputs (token 0 = last
+    emitted, 1..T-1 = drafts); n_draft: (B,) how many drafts are real.
+    Returns (emitted (B, T) int32, accept (B,) int32): row ``b`` emits
+    ``emitted[b, :accept[b]]`` — the matched drafts followed by the model's
+    own token at the first mismatch (the correction, or the bonus token
+    when every draft matched) — and commits ``accept[b]`` call tokens to
+    cache. ``accept == 1 + matched`` always, so a row with no drafts
+    degenerates to exactly one plain decode step.
+    """
+    B, T = tokens.shape
+    k = T - 1
+    ok = (pred[:, :-1] == tokens[:, 1:]) & \
+        (jnp.arange(k, dtype=jnp.int32)[None] < n_draft[:, None])
+    n_match = (jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)
+               if k else jnp.zeros((B,), jnp.int32))
+    accept = (n_match + 1).astype(jnp.int32)
+    corr = jnp.take_along_axis(pred, n_match[:, None], axis=1)     # (B, 1)
+    drafts = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)    # (B, T)
+    idx = jnp.arange(T, dtype=jnp.int32)[None]
+    emitted = jnp.where(idx < n_match[:, None], drafts,
+                        jnp.where(idx == n_match[:, None], corr, -1))
+    return emitted.astype(jnp.int32), accept

@@ -50,11 +50,20 @@ class HeartbeatMonitor:
     def beat(self, host: int):
         self._last[host] = self._clock()
 
-    def check(self):
+    def dead_hosts(self) -> list:
+        """Every host currently past its deadline, ascending — one clock
+        read, so two hosts that died in the same interval are BOTH reported
+        by the same poll (the serving fleet must fail them over together;
+        handling one per poll lets orphans be re-placed onto a replica that
+        is already dead but not yet detected)."""
         now = self._clock()
-        for h, t in self._last.items():
-            if now - t > self.timeout_s:
-                raise HostFailure(h)
+        return sorted(h for h, t in self._last.items()
+                      if now - t > self.timeout_s)
+
+    def check(self):
+        dead = self.dead_hosts()
+        if dead:
+            raise HostFailure(dead[0])
 
     def drop(self, host: int):
         self._last.pop(host, None)

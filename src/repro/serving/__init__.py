@@ -10,6 +10,10 @@ the dataflow diagram):
                   (chunked long-prompt admission, SSM-aware prefill)
   sampling.py   — temperature/top-k/top-p with per-request seeded keys;
                   greedy is the bit-exact default
+  speculative.py— speculative decoding: drafter protocol (n-gram prompt
+                  lookup + draft-model), SpecParams, adaptive draft-length
+                  controller; the one-pass verify step lives in
+                  launch/step_fns.py
   telemetry.py  — per-tick stats, cross-replica b=1 dual-root reduction
   fleet.py      — replica heartbeats -> re-queue + plan_remesh on death
 """
@@ -17,8 +21,12 @@ the dataflow diagram):
 from repro.serving.engine import ServingEngine
 from repro.serving.fleet import FailoverPlan, ReplicaFleet
 from repro.serving.request import Request, RequestState
-from repro.serving.sampling import GREEDY, SamplingParams, sample_tokens
+from repro.serving.sampling import (GREEDY, SamplingParams, sample_tokens,
+                                    sample_tokens_block)
 from repro.serving.scheduler import SlotScheduler
+from repro.serving.speculative import (MAX_DRAFT_K, AdaptiveDraftController,
+                                       Drafter, DraftModelDrafter,
+                                       NgramDrafter, SpecParams)
 from repro.serving.telemetry import (STATS_COLLECTIVE, STATS_FIELDS,
                                      StepStats, TelemetryLog,
                                      make_stats_reducer)
@@ -26,6 +34,8 @@ from repro.serving.telemetry import (STATS_COLLECTIVE, STATS_FIELDS,
 __all__ = [
     "ServingEngine", "Request", "RequestState", "SlotScheduler",
     "ReplicaFleet", "FailoverPlan", "TelemetryLog", "StepStats",
-    "SamplingParams", "GREEDY", "sample_tokens",
+    "SamplingParams", "GREEDY", "sample_tokens", "sample_tokens_block",
+    "SpecParams", "Drafter", "NgramDrafter", "DraftModelDrafter",
+    "AdaptiveDraftController", "MAX_DRAFT_K",
     "make_stats_reducer", "STATS_FIELDS", "STATS_COLLECTIVE",
 ]

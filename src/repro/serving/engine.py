@@ -11,7 +11,13 @@ The engine owns two jitted steps built by :mod:`repro.launch.step_fns`:
   request's seeded sampler (greedy by default) — while in-flight decode
   state in every other slot passes through untouched;
 * a slot-aware **decode** step (compiled once) that advances every busy
-  slot by one token per tick, sampling inside the jitted step.
+  slot by one token per tick, sampling inside the jitted step;
+* when requests opt into speculative decoding (``Request.spec``), a
+  slot-aware **verify** step (compiled once per draft budget) that scores
+  each slot's draft proposals in one pass and advances every busy slot by
+  the accepted length — up to k+1 tokens per tick, streams bit-identical
+  to plain decoding, rejected drafts rolled back leaving no cache residue
+  (see :mod:`repro.serving.speculative` and docs/speculative.md).
 
 Prompts longer than ``prefill_chunk`` are split into fixed-size chunks fed
 one per tick, interleaved with in-flight decode — a long prompt occupies
@@ -53,6 +59,8 @@ from repro.models import transformer as tf
 from repro.serving import sampling
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import SlotScheduler
+from repro.serving.speculative import (AdaptiveDraftController, NgramDrafter,
+                                       SpecParams)
 from repro.serving.telemetry import TelemetryLog
 
 
@@ -73,12 +81,37 @@ class ServingEngine:
     ``stats_reducer`` (see :func:`repro.serving.telemetry.make_stats_reducer`)
     sums per-tick stats across replicas with the b=1 dual-root tree;
     None = single replica.
+
+    ``drafter`` serves requests that opt into speculative decoding via
+    ``Request.spec`` (a :class:`~repro.serving.speculative.SpecParams`):
+    each such tick proposes up to k draft tokens per slot and verifies all
+    of them in ONE jitted pass (:func:`repro.launch.step_fns
+    .make_verify_step`) — emitting several tokens per b=1-reduction tick
+    with streams bit-identical to plain decoding. Default: a
+    :class:`~repro.serving.speculative.NgramDrafter` (prompt lookup, no
+    second model); pass a
+    :class:`~repro.serving.speculative.DraftModelDrafter` built on this
+    engine's mesh and ``n_slots`` to draft with a smaller model.
+
+    ``draft_headroom`` widens window/chunk-bounded attention rings by that
+    many slots (see ``init_cache(ring_slack=...)``): a k-draft verify call
+    writes k+1 tokens at once, and without the slack its later writes would
+    wrap a window-sized ring over positions the call's earliest queries
+    still need — sequential decode never hits this, so the headroom is what
+    keeps speculative verification bit-identical on SWA/chunked-attention
+    architectures. Full-attention rings are never widened. Requests may
+    speculate up to ``draft_k == draft_headroom`` on bounded-ring configs.
+    The default matches ``SpecParams().draft_k`` — default speculation
+    works out of the box at a few extra ring slots per bounded layer; set
+    0 to reclaim them on engines that never speculate, or raise it (up to
+    ``MAX_DRAFT_K``) for wider draft budgets.
     """
 
     def __init__(self, cfg, pcfg: ParallelConfig, mesh, params, *,
                  n_slots: int = 4, max_len: int = 128,
                  min_prefill_bucket: int = 16, prefill_chunk: int | None = None,
-                 stats_reducer=None):
+                 stats_reducer=None, drafter=None,
+                 draft_headroom: int | None = None):
         if not tf.supports_slot_serving(cfg):
             raise ValueError(
                 f"{cfg.name}: slot serving needs input_mode='tokens' and no "
@@ -88,19 +121,19 @@ class ServingEngine:
         self.n_slots, self.max_len = n_slots, max_len
         self.cache_kinds = tf.cache_layer_kinds(cfg)
         self._has_attn = "attn" in self.cache_kinds
-        # longest single prefill CALL: every attention sublayer must fit the
-        # chunk in its (possibly window/chunk-bounded) ring cache, or one
-        # call would write a ring slot twice. Longer prompts are CHUNKED
-        # across calls, not rejected. Pure-recurrent stacks have no ring.
-        s_min = max_len
-        for layer in cfg.pattern:
-            for s in layer:
-                if s.kind == "attn":
-                    if s.sliding_window is not None:
-                        s_min = min(s_min, s.sliding_window)
-                    if s.chunk_size is not None:
-                        s_min = min(s_min, s.chunk_size)
+        # longest single prefill/verify CALL: every attention sublayer must
+        # fit the chunk in its (possibly window/chunk-bounded) ring cache,
+        # or one call would write a ring slot twice. Longer prompts are
+        # CHUNKED across calls, not rejected. Pure-recurrent stacks have
+        # no ring.
+        s_min = tf.prefill_call_bound(cfg, max_len)
         self.max_prompt_len = s_min          # per-call bound (kept name: API)
+        # the speculative in-call wrap hazard only exists where a ring is
+        # narrower than the absolute-position capacity _check enforces
+        self._bounded_ring = s_min < max_len
+        if draft_headroom is None:
+            draft_headroom = SpecParams().draft_k
+        self.draft_headroom = max(0, int(draft_headroom))
         self.prefill_chunk = (s_min if prefill_chunk is None
                               else min(prefill_chunk, s_min))
         if self.prefill_chunk < 1:
@@ -109,10 +142,13 @@ class ServingEngine:
         self.min_prefill_bucket = min(min_prefill_bucket, s_min)
 
         suite = ShapeSuite("serve", max_len, n_slots, "decode")
-        self._decode, sh = step_fns.make_serve_step(cfg, pcfg, mesh, suite,
-                                                    slots=True)
-        self._prefill, _ = step_fns.make_prefill_step(cfg, pcfg, mesh, suite,
-                                                      into_slots=True)
+        self._suite = suite
+        self._decode, sh = step_fns.make_serve_step(
+            cfg, pcfg, mesh, suite, slots=True,
+            ring_slack=self.draft_headroom)
+        self._prefill, _ = step_fns.make_prefill_step(
+            cfg, pcfg, mesh, suite, into_slots=True,
+            ring_slack=self.draft_headroom)
         self._shardings = sh
         self.params = jax.device_put(params, step_fns._named(mesh,
                                                              sh["params"]))
@@ -124,6 +160,9 @@ class ServingEngine:
                               out_shardings=self._cache_sharding)
         self.caches = None            # allocated per run
         self.stats_reducer = stats_reducer
+        self.drafter = drafter
+        self._verify_steps: dict = {}   # draft budget K -> jitted verify
+        self._ctrls: dict = {}          # rid -> AdaptiveDraftController
 
     # ---------------------------------------------------------------- admin
     def _bucket(self, prompt_len: int) -> int:
@@ -139,6 +178,36 @@ class ServingEngine:
                 f"request {req.rid}: prompt+generation "
                 f"{len(req.prompt) + req.max_new_tokens} exceeds cache "
                 f"length {self.max_len}")
+        if req.spec is not None:
+            if not tf.supports_speculation(self.cfg):
+                raise ValueError(
+                    f"request {req.rid}: {self.cfg.name} has a cached "
+                    "sublayer without a verify rollback rule "
+                    "(supports_speculation)")
+            if self._bounded_ring and req.spec.draft_k > self.draft_headroom:
+                raise ValueError(
+                    f"request {req.rid}: draft_k {req.spec.draft_k} exceeds "
+                    f"the engine's draft_headroom {self.draft_headroom} — on "
+                    "window/chunk-bounded rings a wider verify call would "
+                    "overwrite live window positions")
+
+    def _release(self, sched, slot: int, req, now: int, freed) -> None:
+        """Free a finished request's slot (and its drafter/controller)."""
+        sched.release(slot, now)
+        freed[slot] = True
+        if req.spec is not None:
+            self.drafter.release(slot)
+            self._ctrls.pop(req.rid, None)
+
+    def _get_verify(self, draft_k: int):
+        """The verify step compiled for draft budget K (cached per K; the
+        adaptive controller varies k per request WITHIN K via n_draft)."""
+        if draft_k not in self._verify_steps:
+            step, _ = step_fns.make_verify_step(
+                self.cfg, self.pcfg, self.mesh, self._suite, draft_k,
+                ring_slack=self.draft_headroom)
+            self._verify_steps[draft_k] = step
+        return self._verify_steps[draft_k]
 
     def _chunk_plan(self, prompt) -> list:
         """Split a prompt into prefill chunks — a pure function of the
@@ -160,13 +229,30 @@ class ServingEngine:
         exactly in scheduling: slot occupancy, TTFT, and wall time.
         """
         sched = SlotScheduler(self.n_slots)
+        spec_run = False
         for req in requests:
             self._check(req)
             sched.submit(req)
+            spec_run |= req.spec is not None
+        if spec_run:
+            if self.drafter is None:
+                self.drafter = NgramDrafter()
+            if getattr(self.drafter, "n_slots", self.n_slots) != self.n_slots:
+                raise ValueError(
+                    "drafter slot table does not match the engine "
+                    f"({self.drafter.n_slots} != {self.n_slots})")
+            # one compiled verify width per run: the largest requested
+            # draft budget (per-request k varies within it via n_draft),
+            # bounded so a verify call never exceeds the per-call ring
+            # limit (T <= S — same rule as prefill chunks)
+            k_run = min(max(r.spec.draft_k for r in requests
+                            if r.spec is not None),
+                        self.max_prompt_len - 1)
+        self._ctrls = {}
         log = TelemetryLog(self.stats_reducer)
         self.caches = jax.device_put(
             tf.init_cache(self.cfg, self.n_slots, self.max_len,
-                          per_slot=True),
+                          per_slot=True, ring_slack=self.draft_headroom),
             self._cache_sharding)
         last = np.zeros(self.n_slots, np.int32)
         samp = sampling.slot_arrays(self.n_slots)
@@ -180,6 +266,8 @@ class ServingEngine:
             new_tokens = 0
             sampled_tokens = 0
             chunks_fed = 0
+            drafted = 0
+            accepted = 0
             freed = np.zeros(self.n_slots, bool)
 
             # --- admission: grant free slots, stage the chunk plans --------
@@ -187,6 +275,9 @@ class ServingEngine:
             for slot, req in admissions:
                 pending_chunks[slot] = self._chunk_plan(req.prompt)
                 sampling.set_slot(samp, slot, req.sampling)
+                if req.spec is not None:
+                    self._ctrls[req.rid] = AdaptiveDraftController(req.spec)
+                    self.drafter.admit(slot, req)
 
             # --- prefill: one chunk per admitting slot per tick ------------
             # one single-row call per chunk (cost follows the admitted
@@ -223,12 +314,27 @@ class ServingEngine:
                     if req.sampling is not None and not req.sampling.greedy:
                         sampled_tokens += 1
                     if req.done:
-                        sched.release(slot, now)
-                        freed[slot] = True
+                        self._release(sched, slot, req, now, freed)
 
-            # --- decode: one token for every fully-prefilled busy slot -----
+            # --- draft: propose up to k tokens per speculative slot --------
             decodable = {slot: req for slot, req in sched.active.items()
                          if req.state is RequestState.ACTIVE}
+            drafts: dict = {}
+            for slot, req in decodable.items():
+                if req.spec is None:
+                    continue
+                # never draft past the request's budget: the verify call
+                # emits at most k+1 tokens, and capping k at remaining-1
+                # also keeps every REAL written position inside the ring
+                # bound _check admitted against (pad columns never write —
+                # lengths= suppression inside the verify step)
+                k_eff = min(self._ctrls[req.rid].current_k(), k_run,
+                            req.max_new_tokens - len(req.tokens) - 1)
+                if k_eff > 0:
+                    d = self.drafter.propose(slot, req, k_eff)[:k_eff]
+                    if d:
+                        drafts[slot] = [int(t) for t in d]
+
             if decodable:
                 active = np.zeros(self.n_slots, bool)
                 steps = np.zeros(self.n_slots, np.int32)
@@ -247,19 +353,51 @@ class ServingEngine:
                             "top_k": jnp.asarray(samp["top_k"]),
                             "top_p": jnp.asarray(samp["top_p"])}
                            if any_sampled else None)
-                toks, self.caches = self._decode(
-                    self.params, {"tokens": jnp.asarray(last[:, None])},
-                    self.caches, jnp.asarray(active), samp_in)
-                toks = np.asarray(toks).astype(np.int32)
-                for slot, req in decodable.items():
-                    req.tokens.append(int(toks[slot]))
-                    last[slot] = toks[slot]
-                    new_tokens += 1
-                    if req.sampling is not None and not req.sampling.greedy:
-                        sampled_tokens += 1
-                    if req.done:
-                        sched.release(slot, now)
-                        freed[slot] = True
+                if drafts:
+                    # --- verify: score k+1 positions per slot in one pass,
+                    # emit the longest committed-stream-matching prefix ----
+                    buf = np.zeros((self.n_slots, k_run + 1), np.int32)
+                    buf[:, 0] = last
+                    n_draft = np.zeros(self.n_slots, np.int32)
+                    for slot, d in drafts.items():
+                        buf[slot, 1:1 + len(d)] = d
+                        n_draft[slot] = len(d)
+                    out, acc, self.caches = self._get_verify(k_run)(
+                        self.params, jnp.asarray(buf), self.caches,
+                        jnp.asarray(active), jnp.asarray(n_draft), samp_in)
+                    out = np.asarray(out).astype(np.int32)
+                    acc = np.asarray(acc).astype(np.int32)
+                    for slot, req in decodable.items():
+                        n = int(acc[slot])
+                        emit = [int(t) for t in out[slot, :n]]
+                        req.tokens.extend(emit)
+                        last[slot] = emit[-1]
+                        new_tokens += len(emit)
+                        if req.sampling is not None \
+                                and not req.sampling.greedy:
+                            sampled_tokens += len(emit)
+                        nd = int(n_draft[slot])
+                        drafted += nd
+                        accepted += n - 1
+                        if req.spec is not None:
+                            self._ctrls[req.rid].update(nd, n - 1)
+                        if req.done:
+                            self._release(sched, slot, req, now, freed)
+                else:
+                    # --- decode: one token per busy slot (no proposals) ----
+                    toks, self.caches = self._decode(
+                        self.params, {"tokens": jnp.asarray(last[:, None])},
+                        self.caches, jnp.asarray(active), samp_in)
+                    toks = np.asarray(toks).astype(np.int32)
+                    for slot, req in decodable.items():
+                        req.tokens.append(int(toks[slot]))
+                        last[slot] = toks[slot]
+                        new_tokens += 1
+                        if req.sampling is not None \
+                                and not req.sampling.greedy:
+                            sampled_tokens += 1
+                        if req.done:
+                            self._release(sched, slot, req, now, freed)
 
             if freed.any():
                 self.caches = self._reset(self.caches, jnp.asarray(freed))
@@ -267,7 +405,7 @@ class ServingEngine:
                     sampling.set_slot(samp, int(slot), None)
             log.step(now, [sched.arrived_depth(now), len(sched.active),
                            new_tokens, len(admissions), chunks_fed,
-                           sampled_tokens])
+                           sampled_tokens, drafted, accepted])
             now += 1
 
         wall = time.perf_counter() - t0
@@ -278,4 +416,11 @@ class ServingEngine:
                                            for s in log.steps))
         report["prefill_chunks"] = int(sum(s.prefill_chunks
                                            for s in log.steps))
+        report["drafted_tokens"] = int(sum(s.drafted_tokens
+                                           for s in log.steps))
+        report["accepted_tokens"] = int(sum(s.accepted_tokens
+                                            for s in log.steps))
+        report["acceptance_rate"] = (
+            report["accepted_tokens"] / report["drafted_tokens"]
+            if report["drafted_tokens"] else float("nan"))
         return report

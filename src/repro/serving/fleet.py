@@ -8,9 +8,11 @@ stack's fault-tolerance runtime:
 * each replica heartbeats a :class:`~repro.runtime.fault_tolerance
   .HeartbeatMonitor` (transport-injectable, so tests kill replicas with a
   fake clock);
-* when a replica misses its deadline, its queued AND in-flight requests are
-  re-queued at the *front* of a survivor's scheduler (generation restarts
-  from the prompt — slots are device state and died with the replica);
+* when replicas miss their deadline — ALL of them found by one poll, so
+  simultaneous deaths fail over atomically — their queued AND in-flight
+  requests are re-queued at the *front* of a survivor's scheduler, merged
+  in original arrival order (generation restarts from the prompt — slots
+  are device state and died with the replica);
 * the stats-reduction topology is re-planned over the survivors via
   :func:`~repro.runtime.fault_tolerance.plan_remesh` — the b=1 dual-root
   tree re-forms over any surviving subset, so the telemetry collective
@@ -32,9 +34,11 @@ from repro.serving.telemetry import STATS_FIELDS
 
 @dataclasses.dataclass(frozen=True)
 class FailoverPlan:
-    """What a replica death changes: who is gone, what work moved, and the
-    re-planned stats-reduction topology for the survivors."""
-    dead: int
+    """What a replica-death event changes: who is gone, what work moved,
+    and the re-planned stats-reduction topology for the survivors. One
+    plan covers EVERY replica found dead by the same poll — simultaneous
+    deaths fail over atomically."""
+    dead: tuple                # replica ids found dead by this poll
     survivors: tuple
     requeued: tuple            # request ids moved back to the queue front
     elastic: ElasticPlan
@@ -72,29 +76,44 @@ class ReplicaFleet:
 
     # ------------------------------------------------------------ failover
     def poll(self, scheduler: SlotScheduler) -> FailoverPlan | None:
-        """Check heartbeats; on a death, re-queue the dead replica's work
+        """Check heartbeats; on deaths, re-queue the dead replicas' work
         into ``scheduler`` (a survivor's) and re-plan the stats collective.
 
         Returns the :class:`FailoverPlan`, or None while everyone is alive.
-        Never raises on failure — serving degrades, it does not stop.
+        Never raises on a survivable failure — serving degrades, it does
+        not stop (losing EVERY replica is not survivable and raises).
+
+        All replicas past their deadline are handled by ONE poll: their
+        orphan sets are merged and re-queued in original arrival order
+        (``SlotScheduler.requeue_front`` sorts), each orphan is re-placed
+        exactly once, and only onto replicas that are still alive AFTER the
+        whole death set is known. Handling one death per poll — the old
+        behavior — could re-place orphans onto a replica that was already
+        dead but not yet detected, and the next poll would then re-queue
+        them a second time: duplicate queue entries and a scrambled order.
         """
-        try:
-            self.monitor.check()
+        dead = self.monitor.dead_hosts()
+        if not dead:
             return None
-        except HostFailure as f:
-            dead = f.host
-            self.monitor.drop(dead)
-            self._alive.remove(dead)
-            orphans = self._placement.pop(dead)
-            # dead replica's engine state is gone: evict any slot bookkeeping
-            # and restart the requests from their prompts, ahead of the line
-            scheduler.requeue_front(orphans)
-            for req in orphans:
-                target = min(self._alive,
-                             key=lambda r: len(self._placement[r]))
-                self._placement[target].append(req)
-            stats_bytes = float(len(STATS_FIELDS) * 4)
-            plan = plan_remesh(tuple(self._alive), stats_bytes,
-                               self.comm_model)
-            return FailoverPlan(dead, tuple(self._alive),
-                                tuple(r.rid for r in orphans), plan)
+        orphans = []
+        for d in dead:
+            self.monitor.drop(d)
+            self._alive.remove(d)
+            orphans.extend(self._placement.pop(d))
+        if not self._alive:
+            raise HostFailure(dead[0], "every replica failed")
+        # merge the orphan sets in original arrival order (requeue_front
+        # sorts identically — the plan reports the order actually queued)
+        orphans.sort(key=lambda r: (r.arrival, r.rid))
+        # dead replicas' engine state is gone: evict any slot bookkeeping
+        # and restart the requests from their prompts, ahead of the line
+        scheduler.requeue_front(orphans)
+        for req in orphans:
+            target = min(self._alive,
+                         key=lambda r: len(self._placement[r]))
+            self._placement[target].append(req)
+        stats_bytes = float(len(STATS_FIELDS) * 4)
+        plan = plan_remesh(tuple(self._alive), stats_bytes,
+                           self.comm_model)
+        return FailoverPlan(tuple(dead), tuple(self._alive),
+                            tuple(r.rid for r in orphans), plan)

@@ -19,6 +19,7 @@ import dataclasses
 import enum
 
 from repro.serving.sampling import SamplingParams
+from repro.serving.speculative import SpecParams
 
 
 class RequestState(enum.Enum):
@@ -37,7 +38,13 @@ class Request:
     invisible to the scheduler until then — the staggered-arrival workload).
     ``sampling`` is None for greedy decoding (the bit-exact default) or a
     :class:`~repro.serving.sampling.SamplingParams` for seeded
-    temperature/top-k/top-p sampling.
+    temperature/top-k/top-p sampling. ``spec`` is None for plain
+    one-token-per-tick decoding or a
+    :class:`~repro.serving.speculative.SpecParams` to opt this request into
+    speculative decoding — the emitted stream is identical either way (the
+    verify step accepts only tokens the committed greedy/sampled stream
+    would have produced); speculation changes how many ticks the stream
+    takes, never its content.
     """
 
     rid: int
@@ -45,6 +52,7 @@ class Request:
     max_new_tokens: int
     arrival: int = 0
     sampling: SamplingParams | None = None
+    spec: SpecParams | None = None
 
     # runtime fields, owned by the scheduler/engine
     state: RequestState = RequestState.QUEUED

@@ -112,6 +112,29 @@ def sample_tokens(logits, keys, steps, temperature, top_k, top_p):
                      greedy_tok)
 
 
+def sample_tokens_block(logits, keys, steps, temperature, top_k, top_p):
+    """Sample a block of T consecutive token positions per row.
+
+    logits: (B, T, V); keys: (B, 2) raw base keys; steps: (B,) int32 — the
+    request-local index of each row's FIRST position's token. Position
+    ``t`` of row ``b`` uses ``fold_in(key_b, steps[b] + t)`` — exactly the
+    key the non-speculative engine would use for that token index, which is
+    what makes speculative verification reproduce the committed sampled
+    stream bit-for-bit under any accept/reject schedule (the determinism
+    contract in the module docstring, extended to blocks). Returns (B, T)
+    int32. Greedy rows (temperature 0) are the bit-exact argmax per
+    position, as in :func:`sample_tokens`.
+    """
+    B, T, V = logits.shape
+    st = (steps[:, None]
+          + jnp.arange(T, dtype=jnp.int32)[None]).reshape(-1)
+    toks = sample_tokens(
+        logits.reshape(B * T, V), jnp.repeat(keys, T, axis=0), st,
+        jnp.repeat(temperature, T, axis=0), jnp.repeat(top_k, T, axis=0),
+        jnp.repeat(top_p, T, axis=0))
+    return toks.reshape(B, T)
+
+
 def slot_arrays(n_slots: int):
     """Mutable host-side per-slot sampler state the engine updates at
     admission/release: (keys (n,2) u32, temperature (n,), top_k (n,),

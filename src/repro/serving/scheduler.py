@@ -48,8 +48,16 @@ class SlotScheduler:
         """Push failed-over requests at the FRONT of the queue (fleet
         failover: a dead replica's work must not lose its place in line).
         Their generation restarts from the prompt — slots are request-local
-        state, and the dead replica's cache rows died with it."""
-        for req in reversed(list(reqs)):
+        state, and the dead replica's cache rows died with it.
+
+        Requests are re-queued in their ORIGINAL arrival order (ties by
+        rid), not in the caller's iteration order: when several replicas
+        die in one poll their orphan sets arrive merged, and interleaving
+        them by replica would let a later-arriving request overtake an
+        earlier one it never legitimately passed.
+        """
+        ordered = sorted(reqs, key=lambda r: (r.arrival, r.rid))
+        for req in reversed(ordered):
             req.state = RequestState.QUEUED
             req.slot = None
             req.tokens = []

@@ -33,8 +33,17 @@ from repro.core.collectives import CollectiveConfig, all_reduce
 #                    over consecutive ticks)
 #   sampled_tokens — of new_tokens, how many came from a seeded
 #                    temperature/top-k/top-p sampler rather than greedy
+#   drafted_tokens — draft tokens proposed to the speculative verify step
+#                    this tick (0 on plain decode ticks)
+#   accepted_tokens — of drafted_tokens, how many the verify step accepted;
+#                    acceptance rate = accepted/drafted is what the adaptive
+#                    draft-length controller steers on, and a fleet-level
+#                    view of it costs the SAME b=1 reduction the other
+#                    counters already ride (the vector grows by 8 bytes,
+#                    the alpha*log p latency term is unchanged)
 STATS_FIELDS = ("queue_depth", "active_slots", "new_tokens", "prefills",
-                "prefill_chunks", "sampled_tokens")
+                "prefill_chunks", "sampled_tokens", "drafted_tokens",
+                "accepted_tokens")
 
 # b=1: latency-bound single-block pipeline; "auto": measured autotuner hit
 # if one exists for this (p, nbytes, dtype, fabric), else the cost-model
@@ -96,6 +105,8 @@ class StepStats:
     prefills: float
     prefill_chunks: float = 0.0
     sampled_tokens: float = 0.0
+    drafted_tokens: float = 0.0
+    accepted_tokens: float = 0.0
 
 
 class TelemetryLog:

@@ -11,6 +11,10 @@ import textwrap
 
 import pytest
 
+# every test here spawns an 8-virtual-device subprocess: the definition of
+# the `slow` marker (see pytest.ini / `make test-fast`)
+pytestmark = pytest.mark.slow
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

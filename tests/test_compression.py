@@ -18,6 +18,9 @@ from _hyp import given, settings, st
 import jax.numpy as jnp
 
 from repro.core.dptree import _bf16_wire_op
+
+# hypothesis-heavy property sweeps: `slow` (see pytest.ini)
+pytestmark = pytest.mark.slow
 from repro.kernels import quantize
 
 BOUND = lambda g: (2 + int(np.ceil(np.log2(max(g, 2))))) * 2.0 ** -8

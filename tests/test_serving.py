@@ -435,14 +435,15 @@ def test_telemetry_report_fields():
 
 
 def test_telemetry_log_sums_replica_rows():
-    """Default reducer sums a stacked per-replica stats matrix (all six
-    STATS_FIELDS, including the chunk and sampler counters)."""
+    """Default reducer sums a stacked per-replica stats matrix (all eight
+    STATS_FIELDS, including the chunk, sampler, and speculation counters)."""
     log = TelemetryLog()
-    s = log.step(0, np.array([[1, 2, 3, 0, 2, 1], [4, 1, 2, 1, 0, 2]],
-                             np.float32))
+    s = log.step(0, np.array([[1, 2, 3, 0, 2, 1, 4, 2],
+                              [4, 1, 2, 1, 0, 2, 3, 1]], np.float32))
     assert (s.queue_depth, s.active_slots, s.new_tokens, s.prefills,
-            s.prefill_chunks, s.sampled_tokens) \
-        == (5.0, 3.0, 5.0, 1.0, 2.0, 3.0)
+            s.prefill_chunks, s.sampled_tokens, s.drafted_tokens,
+            s.accepted_tokens) \
+        == (5.0, 3.0, 5.0, 1.0, 2.0, 3.0, 7.0, 3.0)
 
 
 # ==========================================================================
@@ -463,7 +464,7 @@ def test_fleet_death_requeues_to_front_and_replans():
     fleet.beat(0)
     fleet.beat(2)                                         # replica 1 is dead
     plan = fleet.poll(sched)
-    assert plan is not None and plan.dead == 1
+    assert plan is not None and plan.dead == (1,)
     assert plan.survivors == (0, 2)
     assert plan.elastic.new_p == 2                        # stats tree re-forms
     dead_rids = set(plan.requeued)
@@ -490,6 +491,7 @@ def test_stats_reducer_single_replica_is_host_sum():
     assert got.tolist() == [1, 2, 3, 4]
 
 
+@pytest.mark.slow          # 8-virtual-device subprocess (see pytest.ini)
 def test_stats_reducer_multireplica_tree_and_autotune_consult(tmp_path):
     """8 virtual replicas: the b=1 reduction sums per-replica stats rows
     (and broadcasts an engine's single local row), ``method='auto'``

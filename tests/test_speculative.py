@@ -1,0 +1,407 @@
+"""Speculative decoding: drafters, one-pass verify, rollback-safe caches,
+acceptance telemetry — plus the PR's satellite regressions (fleet double
+death, CLI fail-fast validation, the --autotune-cache override).
+
+The acceptance bar: greedy speculative token streams bit-identical to the
+non-speculative engine for attention, rwkv6, and hybrid configs under both
+scheduling policies, with strictly fewer engine ticks on draftable
+workloads (every tick = one b=1 dual-root reduction, so fewer ticks per
+token is the whole point).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ParallelConfig, get_config
+from repro.launch.mesh import make_mesh
+from repro.models import transformer as tf
+from repro.models.transformer import ModelConfig, SubSpec
+from repro.serving import (AdaptiveDraftController, DraftModelDrafter,
+                           NgramDrafter, Request, ReplicaFleet,
+                           ServingEngine, SlotScheduler, SpecParams)
+
+
+def tiny_cfg(**kw):
+    base = dict(name="spec-tiny", n_layers=2, d_model=32, n_heads=2,
+                n_kv_heads=2, d_ff=64, vocab_size=101, remat=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+_PARAMS_CACHE = {}
+
+
+def make_engine(cfg=None, n_slots=2, max_len=48, **kw):
+    cfg = cfg or tiny_cfg()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    key = (cfg.name, cfg.n_layers, cfg.d_model)
+    if key not in _PARAMS_CACHE:
+        _PARAMS_CACHE[key] = tf.init_params(jax.random.PRNGKey(0), cfg)
+    kw.setdefault("min_prefill_bucket", 8)
+    return cfg, ServingEngine(cfg, ParallelConfig(), mesh,
+                              _PARAMS_CACHE[key], n_slots=n_slots,
+                              max_len=max_len, **kw)
+
+
+# a prompt with recurring n-grams: the lookup drafter has material to work
+# with, and greedy generation on the tiny random models loops quickly
+REP_PROMPT = (5, 9, 2, 5, 9, 2, 5, 9)
+
+
+def _reqs(spec, *, max_new=12):
+    return [Request(0, REP_PROMPT, max_new_tokens=max_new, spec=spec),
+            Request(1, (7, 3, 7, 3, 7), max_new_tokens=max_new - 4,
+                    arrival=1, spec=spec)]
+
+
+# ==========================================================================
+# the acceptance bar: bit-identical streams, fewer ticks
+# ==========================================================================
+
+@pytest.mark.parametrize("arch", ["attn-tiny", "rwkv6_7b", "jamba_v0_1_52b"])
+def test_spec_streams_bit_identical_across_archs_and_policies(arch):
+    """Greedy speculative streams == non-speculative streams, continuous
+    AND static, for attention / recurrent / hybrid stacks."""
+    cfg = (tiny_cfg() if arch == "attn-tiny"
+           else get_config(arch, reduced=True))
+    _, eng = make_engine(cfg=cfg, n_slots=2, max_len=48)
+    spec = SpecParams(draft_k=4)
+    plain = eng.run(_reqs(None))
+    fast = eng.run(_reqs(spec))
+    stat = eng.run(_reqs(spec), static=True)
+    assert fast["tokens"] == plain["tokens"] == stat["tokens"], arch
+    assert fast["ticks"] <= plain["ticks"], arch
+
+
+def test_spec_strictly_fewer_ticks_on_draftable_workload():
+    """Where drafts actually land (self-repetitive generation), the tick
+    count — i.e. the number of b=1 reduction rounds — strictly drops."""
+    _, eng = make_engine(n_slots=2, max_len=64)
+    reqs = lambda spec: [Request(i, REP_PROMPT, max_new_tokens=20,
+                                 arrival=i, spec=spec) for i in range(3)]
+    plain = eng.run(reqs(None))
+    fast = eng.run(reqs(SpecParams(draft_k=4)))
+    assert fast["tokens"] == plain["tokens"]
+    assert fast["ticks"] < plain["ticks"], \
+        (fast["ticks"], plain["ticks"], fast["acceptance_rate"])
+    assert fast["drafted_tokens"] > 0
+    assert 0 < fast["accepted_tokens"] <= fast["drafted_tokens"]
+
+
+def test_spec_sampled_stream_matches_nonspeculative():
+    """Sampled mode: acceptance tests drafts against the committed
+    fold_in(seed, token_index) sampler, so the realized stream is the
+    non-speculative sampled stream bit-for-bit."""
+    from repro.serving import SamplingParams
+    _, eng = make_engine(n_slots=2, max_len=48)
+    sp = SamplingParams(temperature=0.9, top_p=0.85, seed=11)
+    mk = lambda spec: [Request(0, REP_PROMPT, max_new_tokens=12,
+                               sampling=sp, spec=spec)]
+    plain = eng.run(mk(None))
+    fast = eng.run(mk(SpecParams(draft_k=4)))
+    assert fast["tokens"] == plain["tokens"]
+    assert fast["sampled_tokens"] == fast["total_tokens"]
+
+
+def test_spec_swa_ring_wrap_rolls_back_clean():
+    """Regression for the bounded-ring hazards: on a sliding-window ring a
+    verify call's writes wrap over window positions (a) its own earliest
+    queries still read — closed by the engine's draft_headroom ring slack —
+    and (b) that survive REJECTED drafts — closed by the bit-exact ring
+    restore in commit_verify_caches. Decode far past the window width with
+    drafts that mostly reject and the stream must still match plain
+    decoding exactly."""
+    swcfg = tiny_cfg(name="spec-swa",
+                     pattern=((SubSpec(kind="attn", sliding_window=12),
+                               "mlp"),))
+    _, eng = make_engine(cfg=swcfg, n_slots=2, max_len=64)
+    mk = lambda spec: [Request(0, (3, 7, 3, 7, 3, 7), max_new_tokens=40,
+                               spec=spec)]
+    plain = eng.run(mk(None))
+    fast = eng.run(mk(SpecParams(draft_k=4)))
+    assert fast["tokens"] == plain["tokens"]
+    assert fast["drafted_tokens"] > fast["accepted_tokens"]  # rejections hit
+
+
+def test_spec_full_ring_capacity_pad_writes_suppressed():
+    """Regression (found in review): a request allowed to run its ring to
+    full capacity (prompt + max_new == max_len) must stay bit-identical
+    under speculation. The verify buffer always carries k_run+1 columns;
+    near the cache end the PAD columns' positions run past max_len, and
+    without the lengths= write suppression inside the verify step those
+    writes wrap the full-attention ring over live early-prompt K/V —
+    corrupting the real columns' logits mid-call (the post-hoc ring
+    restore fixes the cache, not the already-computed logits)."""
+    _, eng = make_engine(n_slots=2, max_len=24)
+    prompt = tuple(int(t) for t in
+                   np.random.default_rng(0).integers(1, 101, 8))
+    plain = eng.run([Request(0, prompt, max_new_tokens=16)])
+    fast = eng.run([Request(1, prompt, max_new_tokens=16,
+                            spec=SpecParams(draft_k=4))])
+    assert fast["tokens"][1] == plain["tokens"][0]
+    assert fast["accepted_tokens"] > 0        # the hazard path actually ran
+
+
+def test_ngram_request_override_beats_drafter_default():
+    """SpecParams.ngram takes precedence over the drafter's max_ngram."""
+    d = NgramDrafter(max_ngram=2)
+    req = Request(0, (1, 2, 3, 4, 5, 1, 2, 3, 4, 5, 1, 2, 3),
+                  max_new_tokens=4, spec=SpecParams(ngram=5))
+    assert d.propose(0, req, 3) == [4, 5, 1]  # 5-gram match found
+
+
+def test_spec_draft_headroom_gate_on_bounded_rings():
+    """A draft budget wider than the ring slack must be rejected up front
+    on window/chunk-bounded archs (silently corrupting the window would be
+    the alternative)."""
+    swcfg = tiny_cfg(name="spec-swa",
+                     pattern=((SubSpec(kind="attn", sliding_window=12),
+                               "mlp"),))
+    _, eng = make_engine(cfg=swcfg, n_slots=2, max_len=64, draft_headroom=2)
+    with pytest.raises(ValueError, match="draft_headroom"):
+        eng.run([Request(0, (3, 7), max_new_tokens=4,
+                         spec=SpecParams(draft_k=4))])
+    # within the headroom it serves fine
+    r = eng.run([Request(0, (3, 7), max_new_tokens=4,
+                         spec=SpecParams(draft_k=2))])
+    assert r["requests"] == 1
+
+
+def test_spec_slot_reuse_leaves_no_residue():
+    """A speculative request re-admitted into a freed slot decodes as on a
+    fresh engine: verify writes (including rejected ones) leave nothing."""
+    _, eng = make_engine(n_slots=1, max_len=48)
+    spec = SpecParams(draft_k=3)
+    first = Request(0, REP_PROMPT, max_new_tokens=8, spec=spec)
+    probe = Request(1, (23, 2, 5, 8), max_new_tokens=5, spec=spec)
+    report = eng.run([first, probe])
+    fresh = eng.run([Request(2, (23, 2, 5, 8), max_new_tokens=5, spec=spec)])
+    assert report["tokens"][1] == fresh["tokens"][2]
+
+
+def test_spec_telemetry_counters_ride_the_stats_vector():
+    """drafted/accepted counters land in STATS_FIELDS and the report, and
+    per-tick rows sum to the report totals."""
+    from repro.serving import STATS_FIELDS
+    assert STATS_FIELDS[-2:] == ("drafted_tokens", "accepted_tokens")
+    _, eng = make_engine(n_slots=2, max_len=64)
+    rep = eng.run([Request(0, REP_PROMPT, max_new_tokens=16,
+                           spec=SpecParams(draft_k=4))])
+    assert rep["drafted_tokens"] == \
+        sum(s.drafted_tokens for s in rep["steps"])
+    assert rep["accepted_tokens"] == \
+        sum(s.accepted_tokens for s in rep["steps"])
+    assert rep["accepted_tokens"] <= rep["drafted_tokens"]
+    # plain runs report zero drafts and a NaN acceptance rate
+    plain = eng.run([Request(0, REP_PROMPT, max_new_tokens=4)])
+    assert plain["drafted_tokens"] == 0
+    assert np.isnan(plain["acceptance_rate"])
+
+
+def test_supports_speculation_gate():
+    assert tf.supports_speculation(tiny_cfg())
+    for arch in ("rwkv6_7b", "jamba_v0_1_52b", "minicpm_2b"):
+        assert tf.supports_speculation(get_config(arch, reduced=True)), arch
+    for arch in ("qwen2_vl_7b", "seamless_m4t_large_v2"):
+        assert not tf.supports_speculation(get_config(arch, reduced=True))
+
+
+# ==========================================================================
+# drafters and the controller
+# ==========================================================================
+
+def test_ngram_drafter_lookup_and_fallbacks():
+    d = NgramDrafter(max_ngram=3)
+    req = Request(0, (1, 2, 3, 4, 1, 2, 3), max_new_tokens=4)
+    # trailing 3-gram (1,2,3) recurs at the start; the continuation is 4,1
+    assert d.propose(0, req, 2) == [4, 1]
+    assert d.propose(0, req, 5) == [4, 1, 2, 3]        # runs off history
+    # no recurrence at any n: nothing proposed
+    assert d.propose(0, Request(1, (1, 2, 3, 4), max_new_tokens=2), 3) == []
+    # generated tokens extend the searchable history
+    req2 = Request(2, (9, 8), max_new_tokens=4)
+    req2.tokens = [7, 9, 8]
+    assert d.propose(0, req2, 2) == [7, 9]             # bigram (9,8) recurs
+    with pytest.raises(ValueError, match="max_ngram"):
+        NgramDrafter(max_ngram=0)
+
+
+def test_adaptive_controller_shrinks_and_recovers():
+    spec = SpecParams(draft_k=4, min_k=1, low=0.3, high=0.7, ewma=1.0)
+    ctrl = AdaptiveDraftController(spec)
+    assert ctrl.current_k() == 4                       # optimistic start
+    ctrl.update(4, 0)                                  # total rejection
+    assert ctrl.current_k() == 3
+    for _ in range(5):
+        ctrl.update(3, 0)
+    assert ctrl.current_k() == 1                       # floored at min_k
+    for _ in range(4):
+        ctrl.update(1, 1)                              # full acceptance
+    assert ctrl.current_k() == 4                       # ceiling restored
+    assert ctrl.drafted == 4 + 15 + 4 and ctrl.accepted == 4
+    # no-draft ticks leave the EWMA untouched
+    k = ctrl.current_k()
+    ctrl.update(0, 0)
+    assert ctrl.current_k() == k
+
+
+def test_spec_params_validation():
+    from repro.serving import MAX_DRAFT_K
+    with pytest.raises(ValueError, match="draft_k"):
+        SpecParams(draft_k=0)
+    with pytest.raises(ValueError, match="draft_k"):
+        SpecParams(draft_k=MAX_DRAFT_K + 1)
+    with pytest.raises(ValueError, match="min_k"):
+        SpecParams(draft_k=2, min_k=3)
+    with pytest.raises(ValueError, match="ngram"):
+        SpecParams(ngram=0)
+    with pytest.raises(ValueError, match="ewma"):
+        SpecParams(ewma=0.0)
+    with pytest.raises(ValueError, match="low"):
+        SpecParams(low=0.8, high=0.2)
+
+
+def test_draft_model_drafter_accepts_its_own_model():
+    """Draft model == target model: every greedy draft matches the target's
+    argmax, so acceptance is ~1.0 and the tick count collapses toward
+    ceil(tokens / (k+1)) — and the stream still exactly matches plain
+    decoding (speculation is lossless by construction, not by luck)."""
+    cfg = tiny_cfg()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    key = (cfg.name, cfg.n_layers, cfg.d_model)
+    params = _PARAMS_CACHE.setdefault(
+        key, tf.init_params(jax.random.PRNGKey(0), cfg))
+    drafter = DraftModelDrafter(cfg, params, mesh, n_slots=2, max_len=48)
+    _, eng = make_engine(cfg=cfg, n_slots=2, max_len=48, drafter=drafter)
+    spec = SpecParams(draft_k=4)
+    reqs = [Request(0, (5, 9, 2, 17), max_new_tokens=12, spec=spec),
+            Request(1, (7, 3), max_new_tokens=6, arrival=1, spec=spec)]
+    fast = eng.run(reqs)
+    _, plain_eng = make_engine(cfg=cfg, n_slots=2, max_len=48)
+    plain = plain_eng.run([Request(0, (5, 9, 2, 17), max_new_tokens=12),
+                           Request(1, (7, 3), max_new_tokens=6, arrival=1)])
+    assert fast["tokens"] == plain["tokens"]
+    assert fast["acceptance_rate"] > 0.9
+    assert fast["ticks"] < plain["ticks"]
+    # drafter slot reuse: committed-only cache invariant holds across
+    # requests through the same slot
+    again = eng.run([Request(2, (5, 9, 2, 17), max_new_tokens=12,
+                             spec=spec)])
+    assert again["tokens"][2] == plain["tokens"][0]
+
+
+# ==========================================================================
+# satellite: fleet double-death in one poll
+# ==========================================================================
+
+def test_fleet_double_death_single_poll_requeues_in_arrival_order():
+    """Two replicas dying in the same poll() must fail over ATOMICALLY:
+    both orphan sets re-queued once, merged in original arrival order, and
+    re-placed only onto replicas still alive after the whole death set is
+    known (the old one-death-per-poll path could hand orphans to a replica
+    that was already dead but not yet detected, then re-queue them again
+    next poll)."""
+    clock = [0.0]
+    fleet = ReplicaFleet(4, timeout_s=5.0, clock=lambda: clock[0])
+    reqs = [Request(i, (1 + i,), 2, arrival=i) for i in range(8)]
+    for r in reqs:
+        fleet.assign(r)                       # least-loaded: rid % 4
+    sched = SlotScheduler(2)
+    clock[0] = 10.0
+    fleet.beat(0)
+    fleet.beat(3)                             # replicas 1 AND 2 are dead
+    plan = fleet.poll(sched)
+    assert plan is not None
+    assert plan.dead == (1, 2)
+    assert plan.survivors == (0, 3)
+    assert plan.elastic.new_p == 2
+    # orphans {1,5} (replica 1) + {2,6} (replica 2), ARRIVAL order merged
+    assert list(plan.requeued) == [1, 2, 5, 6]
+    assert sched.queue_depth == 4             # each orphan queued exactly once
+    assert [r.rid for _, r in sched.admit(10)] == [1, 2]   # FIFO head intact
+    # every orphan re-placed exactly once, on survivors only
+    placed = [r.rid for rep in plan.survivors for r in fleet._placement[rep]]
+    assert sorted(r for r in placed if r in {1, 2, 5, 6}) == [1, 2, 5, 6]
+    assert fleet.poll(sched) is None          # nothing handled twice
+    assert sched.queue_depth == 2             # ...and nothing re-queued
+
+    # losing every replica is not survivable
+    clock[0] = 20.0
+    with pytest.raises(Exception, match="every replica"):
+        fleet.poll(sched)
+
+
+def test_scheduler_requeue_front_sorts_merged_orphans():
+    sched = SlotScheduler(2)
+    sched.submit(Request(100, (9,), 2, arrival=0))
+    # merged orphan sets arrive interleaved by replica, not by arrival
+    orphans = [Request(5, (1,), 2, arrival=5), Request(1, (1,), 2, arrival=1),
+               Request(3, (1,), 2, arrival=3)]
+    sched.requeue_front(orphans)
+    order = [r.rid for _, r in sched.admit(10)]
+    for slot in (0, 1):
+        sched.release(slot, 10)
+    order += [r.rid for _, r in sched.admit(10)]
+    assert order == [1, 3, 5, 100]
+
+
+# ==========================================================================
+# satellite: CLI fail-fast validation + --autotune-cache
+# ==========================================================================
+
+def test_serve_cli_rejects_bad_flags_before_tracing():
+    from repro.launch import serve
+    bad = [
+        ["--continuous", "--prefill-chunk", "0"],
+        ["--continuous", "--arrival-gap", "-1"],
+        ["--continuous", "--requests", "0"],
+        ["--continuous", "--slots", "0"],
+        ["--continuous", "--prompt-len", "5", "2"],
+        ["--speculate", "--draft-k", "0"],
+        ["--speculate", "--draft-k", "99"],
+        ["--batch", "0"],
+        ["--cache-len", "0"],
+    ]
+    for argv in bad:
+        with pytest.raises(SystemExit) as e:
+            serve.main(argv)
+        assert e.value.code == 2, argv        # argparse usage error, no jit
+
+
+def test_autotune_cache_flag_overrides_path(tmp_path, monkeypatch):
+    """--autotune-cache on serve.py and train.py overrides
+    default_cache_path() (and thus REPRO_AUTOTUNE_CACHE) for both consults
+    and warm-up writes — the per-deployment cache file."""
+    from repro.core import autotune
+    from repro.launch import serve, train
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "env.json"))
+    autotune.reset_cache()
+    try:
+        p1 = tmp_path / "deploy-a.json"
+        called = {}
+        monkeypatch.setattr(serve, "serve_loop",
+                            lambda args: called.setdefault("serve", args))
+        serve.main(["--autotune-cache", str(p1)])
+        assert "serve" in called
+        assert autotune.default_cache_path() == str(p1)
+        # writes land in the override file, and a reload sees them
+        autotune.get_cache().put(8, 64, "float32", "t",
+                                 autotune.TuneResult("sptree", 2, 1e-6))
+        autotune.get_cache().save()
+        assert p1.exists()
+        assert autotune.AutotuneCache(str(p1)).get(8, 64, "float32",
+                                                   "t").algorithm == "sptree"
+
+        p2 = tmp_path / "deploy-b.json"
+        monkeypatch.setattr(
+            train, "run_with_restarts",
+            lambda fn, max_restarts=3: {"final_loss": 0.0, "restarts": 0})
+        train.main(["--steps", "1", "--autotune-cache", str(p2)])
+        assert autotune.default_cache_path() == str(p2)
+        # without the flag, the env default is back in force
+        autotune.set_cache_path(None)
+        assert autotune.default_cache_path() == str(tmp_path / "env.json")
+    finally:
+        autotune.set_cache_path(None)

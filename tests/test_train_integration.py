@@ -9,6 +9,9 @@ import textwrap
 
 import pytest
 
+# full training loops on subprocess meshes: `slow` (see pytest.ini)
+pytestmark = pytest.mark.slow
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
