@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test test-fast docs-check docs-links bench \
+.PHONY: verify test test-fast test-chaos docs-check docs-links bench \
 	bench-collectives bench-serving
 
 verify:
@@ -14,6 +14,11 @@ verify:
 # tests (tier-1 `make verify` always runs everything)
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
+
+# chaos/robustness suite only: fault injection, exact-resume failover,
+# rejoin, quarantine (already included in `make verify`'s full pytest run)
+test-chaos:
+	$(PY) -m pytest tests/test_chaos.py -q
 
 docs-check:
 	$(PY) tools/check_docs.py

@@ -42,15 +42,28 @@ SPEC_N_REQUESTS = 8
 SPEC_MAX_LEN = 96
 SPEC_K = 4
 
+# --chaos scenario: seeded replica kill + rejoin mid-run across a 2-replica
+# fleet; the flap outlives the death threshold (replica 1 dies at ~tick 8,
+# resumes beating at tick 18, rejoins after probation) so ONE run exercises
+# failover, exact resume, AND the grow-back re-plan. Verified on the
+# attention arch and one SSM arch, greedy and sampled.
+CHAOS_N_REQUESTS = 10
+CHAOS_MAX_LEN = 96
+CHAOS_ARCHS = ("minicpm_2b", "rwkv6_7b")
+CHAOS_FLAP_TICK = 6
+CHAOS_FLAP_TICKS = 12
+CHAOS_TIMEOUT = 2.0
 
-def _build_engine(max_len=MAX_LEN, n_slots=N_SLOTS, prefill_chunk=None):
+
+def _build_engine(max_len=MAX_LEN, n_slots=N_SLOTS, prefill_chunk=None,
+                  arch="minicpm_2b"):
     from repro.configs.base import get_config, get_parallel
     from repro.launch.mesh import make_mesh
     from repro.models import transformer as tf
     from repro.serving import ServingEngine
 
-    cfg = get_config("minicpm_2b", reduced=True)
-    pcfg = get_parallel("minicpm_2b")
+    cfg = get_config(arch, reduced=True)
+    pcfg = get_parallel(arch)
     mesh = make_mesh((1, 1), ("data", "model"))
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
     engine = ServingEngine(cfg, pcfg, mesh, params, n_slots=n_slots,
@@ -107,8 +120,10 @@ def run(csv_out):
             f"static={stat['latency_ticks_p95']:.1f}")
     long_rows = run_long_prompt(csv_out)
     spec_rows = run_speculative(csv_out)
+    chaos_rows = run_chaos(csv_out)
     return {"speedup": speedup, "continuous": cont, "static": stat,
-            "long_prompt": long_rows, "speculative": spec_rows}
+            "long_prompt": long_rows, "speculative": spec_rows,
+            "chaos": chaos_rows}
 
 
 def run_long_prompt(csv_out):
@@ -219,6 +234,61 @@ def run_speculative(csv_out):
     return {"plain": plain, "speculative": fast, "acceptance_rate": rate}
 
 
+def run_chaos(csv_out):
+    """Chaos scenario (docs/robustness.md): a replica is killed mid-run by
+    an over-threshold heartbeat flap, its in-flight work fails over with
+    exact resume, and the replica later REJOINS the fleet — and the merged
+    token streams must match the undisturbed single-engine run bit-for-bit
+    (greedy and sampled, attention and SSM). The interesting numbers are
+    deterministic: recovery ticks (failover -> every orphan committing
+    again) and resumed tokens (journal replayed through re-prefill)."""
+    from repro.launch.serve import synthetic_workload
+    from repro.runtime.chaos import Fault, FaultPlan
+    from repro.serving import FleetRunner, SamplingParams
+
+    plan = FaultPlan((Fault(CHAOS_FLAP_TICK, "flap", replica=1,
+                            duration=CHAOS_FLAP_TICKS),))
+    out = {}
+    for arch in CHAOS_ARCHS:
+        cfg, engine = _build_engine(max_len=CHAOS_MAX_LEN, n_slots=4,
+                                    arch=arch)
+        for mode in ("greedy", "sampled"):
+            sampling = (SamplingParams(temperature=0.9, top_k=20, seed=29)
+                        if mode == "sampled" else None)
+
+            def workload():
+                return synthetic_workload(
+                    CHAOS_N_REQUESTS, cfg.vocab_size, gap=1, seed=31,
+                    prompt_lens=(4, 12), max_new=(8, 28), sampling=sampling)
+
+            base = engine.run(workload())
+            runner = FleetRunner(engine, 2, plan=plan,
+                                 timeout_s=CHAOS_TIMEOUT, misses=1,
+                                 rejoin_backoff_s=1.0)
+            rep = runner.run(workload())
+            diverged = sum(rep["tokens"][rid] != base["tokens"][rid]
+                           for rid in base["tokens"])
+            assert diverged == 0, \
+                f"{arch}/{mode}: {diverged} streams diverged across failover"
+            assert rep["failovers"] > 0, \
+                f"{arch}/{mode}: the flap must actually kill the replica"
+            assert rep["rejoins"] >= 1, \
+                f"{arch}/{mode}: the flapped replica must rejoin mid-run"
+            assert rep["resumed_tokens"] > 0, \
+                f"{arch}/{mode}: failover must exercise exact resume"
+            rec = max(rep["recovery_ticks"]) if rep["recovery_ticks"] else 0
+            csv_out(f"serving_chaos_{arch}_{mode}_diverged", "0",
+                    f"{rep['requests']} streams bit-identical across "
+                    f"kill+rejoin (deterministic)")
+            csv_out(f"serving_chaos_{arch}_{mode}_recovery_ticks", f"{rec}",
+                    f"failovers={rep['failovers']} rejoins={rep['rejoins']}")
+            csv_out(f"serving_chaos_{arch}_{mode}_resumed_tokens",
+                    f"{rep['resumed_tokens']}",
+                    f"journal tokens replayed; total={rep['total_tokens']}")
+            out[f"{arch}/{mode}"] = {"fleet": rep, "recovery_ticks": rec}
+    return out
+
+
 def main(argv=None) -> int:
     """Standalone entry: the default suite or a single scenario, writing
     the same artifact shape as benchmarks.run."""
@@ -230,6 +300,9 @@ def main(argv=None) -> int:
                     help="run only the chunked long-prompt scenario")
     ap.add_argument("--speculative", action="store_true",
                     help="run only the speculative-decoding scenario")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run only the chaos scenario (replica kill + "
+                         "rejoin mid-run, zero token divergence)")
     ap.add_argument("--artifact", default="BENCH_serving.json",
                     help="JSON artifact path ('' disables)")
     args = ap.parse_args(argv)
@@ -246,6 +319,8 @@ def main(argv=None) -> int:
         fn = run_long_prompt
     elif args.speculative:
         fn = run_speculative
+    elif args.chaos:
+        fn = run_chaos
     fn(csv_out)
     if args.artifact:
         doc = {"schema": 1, "suites_run": ["serving"], "failures": [],

@@ -52,6 +52,15 @@ __all__ = [
 
 _ALGORITHMS = ("dptree", "sptree", "redbcast", "ring")
 
+# Every algorithm a cache entry may legitimately name (the tunable set plus
+# the hierarchical composition). Entries outside this set — or with a
+# non-positive block count or a non-finite time — are treated as cache
+# MISSES by :meth:`AutotuneCache.get`: a corrupted cache file must degrade
+# to the analytic cost-model switch, never crash a consumer at trace time
+# (the degrade-never-raise contract, exercised by
+# :func:`repro.runtime.chaos.corrupt_autotune_cache`).
+_VALID_ALGORITHMS = frozenset(_ALGORITHMS) | {"hier"}
+
 # Block-count multipliers probed around the analytic optimum.
 _BLOCK_SWEEP = (0.5, 1.0, 2.0)
 
@@ -166,11 +175,16 @@ class AutotuneCache:
                 # JSON round-trips level tuples as lists; ints stay ints.
                 gs = tuple(int(s) for s in gs) if isinstance(gs, (list, tuple)) \
                     else int(gs)
-            return TuneResult(str(e["algorithm"]), int(e["num_blocks"]),
-                              float(e.get("time_s", 0.0)), gs,
-                              bool(e.get("compressed", False)))
+            res = TuneResult(str(e["algorithm"]), int(e["num_blocks"]),
+                             float(e.get("time_s", 0.0)), gs,
+                             bool(e.get("compressed", False)))
         except (KeyError, TypeError, ValueError):
             return None
+        # semantic validation: corrupted entries are misses, not winners
+        if res.algorithm not in _VALID_ALGORITHMS or res.num_blocks < 1 \
+                or not (0.0 <= res.time_s < 1e18):
+            return None
+        return res
 
     def put(self, p: int, nbytes: int, dtype: str, topology: str,
             result: TuneResult) -> None:

@@ -23,6 +23,14 @@ or a second reduced model via --draft-model:
   PYTHONPATH=src python -m repro.launch.serve --arch minicpm_2b --reduced \
       --speculate --draft-k 4 --requests 8 --slots 4
 
+Chaos mode (docs/robustness.md) serves the same workload across a replica
+fleet under a seeded fault plan — replica kills, heartbeat flaps,
+stragglers, poisoned logits — and proves the merged streams match an
+undisturbed single-engine run bit-for-bit:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch minicpm_2b --reduced \
+      --chaos-seed 7 --replicas 3 --heartbeat-timeout 2 --heartbeat-misses 2
+
 Legacy fixed-batch demo (every row decodes in lockstep from an empty cache):
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite_3_8b --reduced \
@@ -140,6 +148,58 @@ def serve_continuous(args):
     return report
 
 
+def serve_chaos(args):
+    """Serve across a replica fleet under a seeded fault plan and verify
+    zero token divergence against the undisturbed single-engine run."""
+    from repro.runtime.chaos import FaultPlan
+    from repro.serving import (FleetRunner, SamplingParams, ServingEngine,
+                               make_stats_reducer)
+    mesh_shape = tuple(int(x) for x in args.mesh.split("x"))
+    axes = ("data", "model")[-len(mesh_shape):]
+    mesh = make_mesh(mesh_shape, axes)
+    cfg = get_config(args.arch, reduced=args.reduced)
+    pcfg = get_parallel(args.arch)
+    params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
+    engine = ServingEngine(cfg, pcfg, mesh, params, n_slots=args.slots,
+                           max_len=args.cache_len,
+                           prefill_chunk=args.prefill_chunk,
+                           stats_reducer=make_stats_reducer(mesh))
+    sampling = None
+    if args.temperature > 0:
+        sampling = SamplingParams(temperature=args.temperature,
+                                  top_k=args.top_k, top_p=args.top_p,
+                                  seed=args.sample_seed)
+
+    def workload():
+        return synthetic_workload(args.requests, cfg.vocab_size,
+                                  gap=args.arrival_gap, seed=args.seed + 1,
+                                  prompt_lens=tuple(args.prompt_len),
+                                  sampling=sampling)
+
+    base = engine.run(workload())
+    plan = FaultPlan.seeded(args.chaos_seed, n_replicas=args.replicas,
+                            horizon=max(2, base["ticks"]))
+    runner = FleetRunner(engine, args.replicas, plan=plan,
+                         timeout_s=args.heartbeat_timeout,
+                         misses=args.heartbeat_misses,
+                         rejoin_backoff_s=args.rejoin_backoff)
+    report = runner.run(workload())
+    diverged = sum(report["tokens"][rid] != base["tokens"][rid]
+                   for rid in base["tokens"])
+    faults = ", ".join(f"t{f.tick}:{f.kind}@r{f.replica}" for f in plan) \
+        or "none"
+    print(f"[chaos seed={args.chaos_seed}] faults: {faults}")
+    print(f"[chaos] {report['requests']} requests over "
+          f"{report['n_replicas']} replicas: {report['failovers']} "
+          f"failovers, {report['quarantines']} quarantines, "
+          f"{report['rejoins']} rejoins, {report['resumed_tokens']} "
+          f"resumed tokens, recovery {report['recovery_ticks']} ticks, "
+          f"{diverged} diverged streams (want 0)")
+    if diverged:
+        raise SystemExit(f"chaos run diverged on {diverged} streams")
+    return report
+
+
 def serve_loop(args):
     mesh_shape = tuple(int(x) for x in args.mesh.split("x"))
     axes = ("data", "model")[-len(mesh_shape):]
@@ -241,11 +301,29 @@ def main(argv=None):
                     help="per-deployment autotune cache file; overrides "
                          "REPRO_AUTOTUNE_CACHE and the XDG default (what "
                          "the b=1 stats reduction's method='auto' consults)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="serve the workload across --replicas engines "
+                         "under the seeded fault plan (kills, flaps, "
+                         "stragglers, poisoned logits) and verify zero "
+                         "token divergence vs the undisturbed run")
+    ap.add_argument("--replicas", type=int, default=3,
+                    help="chaos mode: fleet size (>= 2)")
+    ap.add_argument("--heartbeat-timeout", type=float, default=2.0,
+                    help="chaos mode: heartbeat deadline in ticks (the "
+                         "fleet simulation's virtual clock)")
+    ap.add_argument("--heartbeat-misses", type=int, default=1,
+                    help="chaos mode: missed deadlines before a SUSPECT "
+                         "replica is declared dead (flap tolerance)")
+    ap.add_argument("--rejoin-backoff", type=float, default=1.0,
+                    help="chaos mode: base rejoin probation in ticks "
+                         "(doubles per drop)")
     args = ap.parse_args(argv)
     _validate_args(ap, args)
     if args.autotune_cache:
         from repro.core import autotune
         autotune.set_cache_path(args.autotune_cache)
+    if args.chaos_seed is not None:
+        return serve_chaos(args)
     if args.continuous or args.static or args.speculate or args.draft_model:
         return serve_continuous(args)
     return serve_loop(args)
@@ -274,6 +352,25 @@ def _validate_args(ap, args) -> None:
         ap.error(f"--batch must be >= 1, got {args.batch}")
     if args.cache_len < 1:
         ap.error(f"--cache-len must be >= 1, got {args.cache_len}")
+    if args.heartbeat_timeout <= 0:
+        ap.error(f"--heartbeat-timeout must be > 0, "
+                 f"got {args.heartbeat_timeout}")
+    if args.heartbeat_misses < 1:
+        ap.error(f"--heartbeat-misses must be >= 1, "
+                 f"got {args.heartbeat_misses}")
+    if args.rejoin_backoff < 0:
+        ap.error(f"--rejoin-backoff must be >= 0, got {args.rejoin_backoff}")
+    if args.chaos_seed is not None:
+        if args.replicas < 2:
+            ap.error(f"--chaos-seed needs --replicas >= 2, "
+                     f"got {args.replicas}")
+        if args.speculate or args.draft_model:
+            ap.error("--chaos-seed is incompatible with --speculate/"
+                     "--draft-model: the drafter slot table is engine-"
+                     "global, and the fleet runs one session per replica")
+        if args.static:
+            ap.error("--chaos-seed is incompatible with --static "
+                     "(the fleet is continuous-batching only)")
 
 
 if __name__ == "__main__":

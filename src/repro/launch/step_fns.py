@@ -422,12 +422,23 @@ def make_serve_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
     if slots:
         from repro.serving.sampling import sample_tokens
 
+        def _guard(logits, tokens):
+            # decode-logits guard: a row whose logits contain NaN/Inf
+            # (poisoned cache, numerical blow-up) reports the -1 sentinel
+            # instead of an in-vocab token — argmax/categorical over
+            # non-finite logits silently yield a plausible-looking id, so
+            # the corruption MUST be flagged in-graph for the engine to
+            # refuse the commit and quarantine (docs/robustness.md)
+            ok = jnp.isfinite(logits).all(axis=-1)
+            return jnp.where(ok, tokens, jnp.int32(-1))
+
         def greedy_body(params, inputs, caches, active):
             from repro.models.layers import mesh_ctx
             with mesh_ctx(mesh):
                 logits, new_caches = tf.decode_step(params, cfg, inputs,
                                                     caches, active=active)
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_caches
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return _guard(logits, tok), new_caches
 
         def sampled_body(params, inputs, caches, active, sampling):
             from repro.models.layers import mesh_ctx
@@ -437,7 +448,7 @@ def make_serve_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
             tokens = sample_tokens(logits, sampling["key"], sampling["step"],
                                    sampling["temperature"],
                                    sampling["top_k"], sampling["top_p"])
-            return tokens, new_caches
+            return _guard(logits, tokens), new_caches
 
         # all-greedy ticks (the default and the bench path) keep the hot
         # decode step at a plain argmax — the full-vocab sort/softmax of
@@ -541,15 +552,24 @@ def make_verify_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
                                                  active)
         return emitted, accept, new_caches
 
+    def _vguard(lg, pred):
+        # same non-finite-logits sentinel as the decode step: a poisoned
+        # position predicts -1, which never matches a draft (ids >= 0), so
+        # acceptance stops before it — and the engine refuses any emitted
+        # -1 rather than committing a token argmaxed out of NaNs
+        return jnp.where(jnp.isfinite(lg).all(axis=-1), pred, jnp.int32(-1))
+
     def greedy_body(params, tokens, caches, active, n_draft):
         return _verify(params, tokens, caches, active, n_draft,
-                       lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
+                       lambda lg: _vguard(lg, jnp.argmax(lg, axis=-1)
+                                          .astype(jnp.int32)))
 
     def sampled_body(params, tokens, caches, active, n_draft, sampling):
         def pred_fn(lg):
-            return sample_tokens_block(lg, sampling["key"], sampling["step"],
+            pred = sample_tokens_block(lg, sampling["key"], sampling["step"],
                                        sampling["temperature"],
                                        sampling["top_k"], sampling["top_p"])
+            return _vguard(lg, pred)
         return _verify(params, tokens, caches, active, n_draft, pred_fn)
 
     # the same greedy/sampled split as make_serve_step: the default path

@@ -7,10 +7,26 @@ coordinator (GCS / k8s liveness); here it is injectable so tests can kill
 
 * the dual-tree topology is parametric in ``p`` — **any** surviving subset of
   hosts re-forms a valid collective schedule in O(p) host time (the paper's
-  ``p = 2^h - 2`` balance is a special case, not a requirement);
+  ``p = 2^h - 2`` balance is a special case, not a requirement), and the
+  same property lets the schedule *grow* back over a rejoined host;
 * the data pipeline is stateless-indexable, so a re-shard after shrink
   replays the exact global batch stream;
 * checkpoints publish atomically, so restart-from-latest is always consistent.
+
+The :class:`HeartbeatMonitor` is a flap-tolerant state machine
+(docs/robustness.md):
+
+    ALIVE --missed deadline--> SUSPECT --``misses`` deadlines--> DEAD
+      ^                           |                               |
+      |____resumed beats__________|        resumed beats + backoff|
+      |___________________________________________________________|
+                              (rejoin)
+
+``misses=1`` (the default) collapses SUSPECT into DEAD — the pre-flap
+behavior, byte-compatible with existing callers. A dropped host that beats
+again becomes *rejoinable* once it has beaten steadily for its backoff
+window, which doubles with every drop (a flapping host earns longer
+probation each time).
 """
 
 from __future__ import annotations
@@ -29,45 +45,120 @@ __all__ = ["HostFailure", "HeartbeatMonitor", "ElasticPlan", "plan_remesh",
 
 
 class HostFailure(RuntimeError):
-    """Raised (or injected) when a host misses its heartbeat deadline."""
+    """Raised (or injected) when hosts miss their heartbeat deadline.
 
-    def __init__(self, host: int, msg: str = ""):
+    ``host`` is the first (lowest-id) dead host — kept for callers that
+    predate simultaneous-death reporting; ``hosts`` is the FULL dead set
+    found by the same poll, which is what fleet failover must act on."""
+
+    def __init__(self, host: int, msg: str = "", hosts=None):
         self.host = host
-        super().__init__(msg or f"host {host} failed heartbeat")
+        self.hosts = tuple(hosts) if hosts else (host,)
+        if not msg:
+            ids = ", ".join(str(h) for h in self.hosts)
+            noun = "hosts" if len(self.hosts) > 1 else "host"
+            msg = f"{noun} {ids} failed heartbeat"
+        super().__init__(msg)
 
 
 class HeartbeatMonitor:
-    """Tracks last-seen timestamps per host; ``check`` raises on timeout."""
+    """Tracks last-seen timestamps per host; see the module docstring for
+    the ALIVE/SUSPECT/DEAD/rejoin state machine.
+
+    ``timeout_s`` is one missed deadline; a host is SUSPECT past
+    ``timeout_s`` and DEAD past ``misses * timeout_s``. ``rejoin_backoff_s``
+    is the base probation a dropped host must beat through before
+    :meth:`rejoinable` reports it (doubled per drop, capped at
+    ``rejoin_cap_s``); 0 means a single resumed beat suffices."""
 
     def __init__(self, n_hosts: int, timeout_s: float = 60.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic, *,
+                 misses: int = 1, rejoin_backoff_s: float = 0.0,
+                 rejoin_cap_s: float = 3600.0):
+        if misses < 1:
+            raise ValueError(f"misses must be >= 1, got {misses}")
+        if timeout_s <= 0:
+            raise ValueError(f"timeout_s must be > 0, got {timeout_s}")
         self.n_hosts = n_hosts
         self.timeout_s = timeout_s
+        self.misses = misses
+        self.rejoin_backoff_s = rejoin_backoff_s
+        self.rejoin_cap_s = rejoin_cap_s
         self._clock = clock
         now = clock()
         self._last = {h: now for h in range(n_hosts)}
+        self._drops: dict = {}    # host -> times dropped (persists forever)
+        self._gone: dict = {}     # dropped host -> {"resumed": t|None, "last": t}
 
     def beat(self, host: int):
+        if host in self._gone:
+            # a dropped host talking again: start (or continue) probation
+            info = self._gone[host]
+            now = self._clock()
+            if info["resumed"] is None:
+                info["resumed"] = now
+            info["last"] = now
+            return
         self._last[host] = self._clock()
 
+    def suspect_hosts(self) -> list:
+        """Hosts past one deadline but not yet declared dead (the flap
+        grace window; empty when ``misses == 1``)."""
+        now = self._clock()
+        return sorted(h for h, t in self._last.items()
+                      if self.timeout_s < now - t <= self.misses
+                      * self.timeout_s)
+
     def dead_hosts(self) -> list:
-        """Every host currently past its deadline, ascending — one clock
+        """Every host past ``misses`` deadlines, ascending — one clock
         read, so two hosts that died in the same interval are BOTH reported
         by the same poll (the serving fleet must fail them over together;
         handling one per poll lets orphans be re-placed onto a replica that
         is already dead but not yet detected)."""
         now = self._clock()
         return sorted(h for h, t in self._last.items()
-                      if now - t > self.timeout_s)
+                      if now - t > self.misses * self.timeout_s)
 
     def check(self):
         dead = self.dead_hosts()
         if dead:
-            raise HostFailure(dead[0])
+            raise HostFailure(dead[0], hosts=tuple(dead))
 
     def drop(self, host: int):
         self._last.pop(host, None)
+        self._drops[host] = self._drops.get(host, 0) + 1
+        self._gone[host] = {"resumed": None, "last": None}
         self.n_hosts -= 1
+
+    def rejoin_backoff(self, host: int) -> float:
+        """This host's current probation window (exponential per drop)."""
+        k = max(1, self._drops.get(host, 1))
+        return min(self.rejoin_cap_s, self.rejoin_backoff_s * 2 ** (k - 1))
+
+    def rejoinable(self) -> list:
+        """Dropped hosts that have resumed beating and beaten steadily
+        through their backoff window. A host whose resumed beats go stale
+        again (flapping during probation) restarts its probation."""
+        now = self._clock()
+        out = []
+        for h in sorted(self._gone):
+            info = self._gone[h]
+            if info["resumed"] is None:
+                continue
+            if now - info["last"] > self.timeout_s:
+                info["resumed"] = None          # flapped during probation
+                continue
+            if now - info["resumed"] >= self.rejoin_backoff(h):
+                out.append(h)
+        return out
+
+    def readmit(self, host: int):
+        """Move a rejoinable host back to the alive set."""
+        if host not in self._gone:
+            raise ValueError(f"host {host} was never dropped")
+        del self._gone[host]
+        self._last[host] = self._clock()
+        self.n_hosts += 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,7 +173,11 @@ class ElasticPlan:
 
 def plan_remesh(survivors, grad_bytes: float,
                 model: cm.CommModel = cm.TPU_V5E) -> ElasticPlan:
-    """Rebuild the collective plan for the surviving data-parallel ranks."""
+    """Rebuild the collective plan for the surviving data-parallel ranks.
+
+    The same call re-plans a *grow*: the dual-root tree is parametric in
+    ``p``, so a rejoined rank simply yields a taller/wider schedule —
+    shrink and grow are the one code path."""
     p = len(survivors)
     topo = build_dual_tree(p)
     b = cm.optimal_blocks(p, grad_bytes, model, "dptree")
@@ -94,16 +189,22 @@ class StragglerTuner:
     """Pipelined trees are bulk-synchronous per macro-round: one slow link
     stretches every round. When observed step time exceeds the model's
     prediction by ``threshold``, shrink the block count (fewer, larger rounds
-    amortize the straggler's per-round latency penalty alpha_hat)."""
+    amortize the straggler's per-round latency penalty alpha_hat). When the
+    observed times later return to the base model's prediction, re-solve
+    back to the unscaled optimum — a transient straggler must not
+    permanently pessimize the collective (``recovery`` is the tolerance on
+    "returned to prediction")."""
 
     def __init__(self, p: int, grad_bytes: float,
                  model: cm.CommModel = cm.TPU_V5E, threshold: float = 1.5,
-                 window: int = 20):
+                 window: int = 20, recovery: float = 1.25):
         self.p, self.grad_bytes, self.model = p, grad_bytes, model
         self.threshold = threshold
+        self.recovery = recovery
         self.window = window
         self.times: list = []
         self.num_blocks = cm.optimal_blocks(p, grad_bytes, model, "dptree")
+        self._opt_blocks = self.num_blocks    # the unscaled-model optimum
 
     def observe(self, step_time_s: float) -> int:
         self.times.append(step_time_s)
@@ -119,13 +220,29 @@ class StragglerTuner:
                 self.num_blocks = max(1, cm.optimal_blocks(
                     self.p, self.grad_bytes, scaled, "dptree"))
                 self.times.clear()
+            elif (self.num_blocks != self._opt_blocks
+                  and med <= self.recovery * pred):
+                # observed times match the BASE model again at the current
+                # block count: the straggler cleared — undo the ratchet
+                self.num_blocks = self._opt_blocks
+                self.times.clear()
         return self.num_blocks
 
 
-def run_with_restarts(loop_fn: Callable[[int], dict], max_restarts: int = 3):
+def run_with_restarts(loop_fn: Callable[[int], dict], max_restarts: int = 3,
+                      *, backoff_s: float = 0.0, backoff_cap_s: float = 60.0,
+                      jitter: float = 0.1, seed: int = 0,
+                      sleep: Callable[[float], None] = time.sleep):
     """Supervise ``loop_fn(attempt)``; on HostFailure restart from the latest
     checkpoint (loop_fn is responsible for restore-on-entry). Returns the
-    final result dict with a ``restarts`` count."""
+    final result dict with a ``restarts`` count.
+
+    Between restarts the supervisor waits ``backoff_s * 2**(attempt-1)``
+    seconds (capped at ``backoff_cap_s``) plus a DETERMINISTIC jitter
+    fraction in ``[0, jitter)`` derived from ``(seed, attempt)`` — restarts
+    of a crashed fleet de-synchronize (no thundering-herd re-init) yet
+    every run with the same seed replays the same schedule. ``backoff_s=0``
+    (the default) restarts immediately, the pre-backoff behavior."""
     attempt = 0
     while True:
         try:
@@ -136,3 +253,8 @@ def run_with_restarts(loop_fn: Callable[[int], dict], max_restarts: int = 3):
             attempt += 1
             if attempt > max_restarts:
                 raise
+            if backoff_s > 0:
+                delay = min(backoff_cap_s, backoff_s * 2 ** (attempt - 1))
+                frac = float(np.random.default_rng(
+                    seed + attempt).uniform(0.0, max(jitter, 0.0)))
+                sleep(delay * (1.0 + frac))

@@ -15,11 +15,13 @@ the dataflow diagram):
                   controller; the one-pass verify step lives in
                   launch/step_fns.py
   telemetry.py  — per-tick stats, cross-replica b=1 dual-root reduction
-  fleet.py      — replica heartbeats -> re-queue + plan_remesh on death
+  fleet.py      — replica heartbeats -> exact-resume failover on death,
+                  rejoin + quarantine, plan_remesh shrink/grow; FleetRunner
+                  drives one EngineSession per replica under a chaos plan
 """
 
-from repro.serving.engine import ServingEngine
-from repro.serving.fleet import FailoverPlan, ReplicaFleet
+from repro.serving.engine import EngineSession, PoisonedLogits, ServingEngine
+from repro.serving.fleet import FailoverPlan, FleetRunner, ReplicaFleet
 from repro.serving.request import Request, RequestState
 from repro.serving.sampling import (GREEDY, SamplingParams, sample_tokens,
                                     sample_tokens_block)
@@ -32,8 +34,10 @@ from repro.serving.telemetry import (STATS_COLLECTIVE, STATS_FIELDS,
                                      make_stats_reducer)
 
 __all__ = [
-    "ServingEngine", "Request", "RequestState", "SlotScheduler",
-    "ReplicaFleet", "FailoverPlan", "TelemetryLog", "StepStats",
+    "ServingEngine", "EngineSession", "PoisonedLogits",
+    "Request", "RequestState", "SlotScheduler",
+    "ReplicaFleet", "FleetRunner", "FailoverPlan",
+    "TelemetryLog", "StepStats",
     "SamplingParams", "GREEDY", "sample_tokens", "sample_tokens_block",
     "SpecParams", "Drafter", "NgramDrafter", "DraftModelDrafter",
     "AdaptiveDraftController", "MAX_DRAFT_K",

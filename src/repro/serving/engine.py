@@ -162,7 +162,6 @@ class ServingEngine:
         self.stats_reducer = stats_reducer
         self.drafter = drafter
         self._verify_steps: dict = {}   # draft budget K -> jitted verify
-        self._ctrls: dict = {}          # rid -> AdaptiveDraftController
 
     # ---------------------------------------------------------------- admin
     def _bucket(self, prompt_len: int) -> int:
@@ -191,14 +190,6 @@ class ServingEngine:
                     "window/chunk-bounded rings a wider verify call would "
                     "overwrite live window positions")
 
-    def _release(self, sched, slot: int, req, now: int, freed) -> None:
-        """Free a finished request's slot (and its drafter/controller)."""
-        sched.release(slot, now)
-        freed[slot] = True
-        if req.spec is not None:
-            self.drafter.release(slot)
-            self._ctrls.pop(req.rid, None)
-
     def _get_verify(self, draft_k: int):
         """The verify step compiled for draft budget K (cached per K; the
         adaptive controller varies k per request WITHIN K via n_draft)."""
@@ -217,6 +208,15 @@ class ServingEngine:
         return [prompt[i:i + c] for i in range(0, len(prompt), c)]
 
     # ---------------------------------------------------------------- run
+    def start(self, requests=(), *, static: bool = False) -> "EngineSession":
+        """Open an :class:`EngineSession` — the tick-stepping form of
+        :meth:`run`. The session owns its caches, scheduler, and sampler
+        state, so several sessions can share one engine's compiled steps
+        (the fleet simulation runs one session per replica); more requests
+        may be submitted while the session runs (failover re-admission).
+        """
+        return EngineSession(self, requests, static=static)
+
     def run(self, requests, *, static: bool = False,
             max_ticks: int = 100_000) -> dict:
         """Serve ``requests`` to completion; returns the telemetry report.
@@ -228,198 +228,315 @@ class ServingEngine:
         sampler keys only on the request itself — so the policies differ
         exactly in scheduling: slot occupancy, TTFT, and wall time.
         """
-        sched = SlotScheduler(self.n_slots)
-        spec_run = False
+        session = self.start(requests, static=static)
+        while session.running:
+            if session.now >= max_ticks:
+                raise RuntimeError(f"serving stalled after {max_ticks} ticks")
+            session.tick()
+        self.caches = session.caches
+        return session.report()
+
+
+class PoisonedLogits(RuntimeError):
+    """Raised by a session when a decode/verify tick produced non-finite
+    logits for one or more active slots (the in-graph guard's -1 sentinel).
+    NO token from the poisoned tick was committed — every affected
+    request's journal still ends at its last good token, so the fleet can
+    quarantine the replica and fail its work over with exact resume."""
+
+    def __init__(self, slots, rids):
+        self.slots = tuple(slots)
+        self.rids = tuple(rids)
+        super().__init__(
+            f"non-finite decode logits in slots {self.slots} "
+            f"(requests {self.rids}); tick not committed")
+
+
+class EngineSession:
+    """One serving run in progress, advanced one :meth:`tick` at a time.
+
+    :meth:`ServingEngine.run` is ``start`` + tick-to-completion; the fleet
+    runner instead interleaves ticks of several sessions (one per replica)
+    under a heartbeat monitor and a fault injector, which is what turns
+    failover from an end-state assertion into a mid-run event.
+
+    Exact resume: a request admitted with a non-empty committed-token
+    journal (``req.tokens`` — preserved by ``requeue_front`` on failover)
+    is re-prefilled over ``prompt + tokens[:-1]`` through the ordinary
+    chunked-admission machinery (attention rings rebuild position-exact;
+    SSM carries rebuild via the ``lengths=`` checkpoint paths), the
+    prefill's re-derived token is DISCARDED (the journal is authoritative
+    — for greedy requests it equals the last committed token, a tested
+    invariant), and decode resumes feeding ``tokens[-1]`` at sampler
+    cursor ``len(tokens)`` — the merged stream is bit-identical to an
+    undisturbed run for greedy and sampled requests alike. On
+    window/chunk-bounded rings (SWA) a resume falls back to the lossy
+    restart-from-prompt: those rings guarantee chunk-PLAN determinism
+    only, and a resume necessarily runs a different plan; the restart
+    replays the ORIGINAL plan, so streams still come out identical.
+
+    Speculative requests are engine-global state (one drafter slot table);
+    run several concurrent sessions only with ``spec=None`` requests.
+    """
+
+    def __init__(self, engine: ServingEngine, requests=(), *,
+                 static: bool = False):
+        self.engine = engine
+        self.static = static
+        self.sched = SlotScheduler(engine.n_slots)
+        self.k_run = 0
+        self._ctrls: dict = {}
+        self.caches = jax.device_put(
+            tf.init_cache(engine.cfg, engine.n_slots, engine.max_len,
+                          per_slot=True, ring_slack=engine.draft_headroom),
+            engine._cache_sharding)
+        self.last = np.zeros(engine.n_slots, np.int32)
+        self.samp = sampling.slot_arrays(engine.n_slots)
+        self.pending_chunks: dict = {}   # slot -> remaining prompt chunks
+        self._resume_last: dict = {}     # slot -> journal tail to re-feed
+        self.log = TelemetryLog(engine.stats_reducer)
+        self.now = 0
+        self._t0 = time.perf_counter()
         for req in requests:
-            self._check(req)
-            sched.submit(req)
-            spec_run |= req.spec is not None
-        if spec_run:
-            if self.drafter is None:
-                self.drafter = NgramDrafter()
-            if getattr(self.drafter, "n_slots", self.n_slots) != self.n_slots:
+            self.submit(req)
+
+    def submit(self, req) -> None:
+        """Queue one more request (initial workload or failover orphan)."""
+        eng = self.engine
+        eng._check(req)
+        if req.spec is not None:
+            if eng.drafter is None:
+                eng.drafter = NgramDrafter()
+            if getattr(eng.drafter, "n_slots", eng.n_slots) != eng.n_slots:
                 raise ValueError(
                     "drafter slot table does not match the engine "
-                    f"({self.drafter.n_slots} != {self.n_slots})")
-            # one compiled verify width per run: the largest requested
+                    f"({eng.drafter.n_slots} != {eng.n_slots})")
+            # one compiled verify width per session: the largest requested
             # draft budget (per-request k varies within it via n_draft),
             # bounded so a verify call never exceeds the per-call ring
             # limit (T <= S — same rule as prefill chunks)
-            k_run = min(max(r.spec.draft_k for r in requests
-                            if r.spec is not None),
-                        self.max_prompt_len - 1)
-        self._ctrls = {}
-        log = TelemetryLog(self.stats_reducer)
-        self.caches = jax.device_put(
-            tf.init_cache(self.cfg, self.n_slots, self.max_len,
-                          per_slot=True, ring_slack=self.draft_headroom),
-            self._cache_sharding)
-        last = np.zeros(self.n_slots, np.int32)
-        samp = sampling.slot_arrays(self.n_slots)
-        pending_chunks: dict = {}     # slot -> remaining prompt chunks
+            self.k_run = min(max(self.k_run, req.spec.draft_k),
+                             eng.max_prompt_len - 1)
+        self.sched.submit(req)
 
-        t0 = time.perf_counter()
-        now = 0
-        while sched.pending or sched.active:
-            if now >= max_ticks:
-                raise RuntimeError(f"serving stalled after {max_ticks} ticks")
-            new_tokens = 0
-            sampled_tokens = 0
-            chunks_fed = 0
-            drafted = 0
-            accepted = 0
-            freed = np.zeros(self.n_slots, bool)
+    @property
+    def running(self) -> bool:
+        return self.sched.pending or bool(self.sched.active)
 
-            # --- admission: grant free slots, stage the chunk plans --------
-            admissions = sched.admit(now, batch_sync=static)
-            for slot, req in admissions:
-                pending_chunks[slot] = self._chunk_plan(req.prompt)
-                sampling.set_slot(samp, slot, req.sampling)
-                if req.spec is not None:
-                    self._ctrls[req.rid] = AdaptiveDraftController(req.spec)
-                    self.drafter.admit(slot, req)
+    def _release(self, slot: int, req, freed) -> None:
+        """Free a finished request's slot (and its drafter/controller)."""
+        self.sched.release(slot, self.now)
+        freed[slot] = True
+        if req.spec is not None:
+            self.engine.drafter.release(slot)
+            self._ctrls.pop(req.rid, None)
 
-            # --- prefill: one chunk per admitting slot per tick ------------
-            # one single-row call per chunk (cost follows the admitted
-            # prompt, not n_slots); the prompt bucket keeps Tc off the
-            # compile-cache hot path. The final chunk emits the request's
-            # first token (sampled; greedy rows bit-exact argmax).
-            for slot in sorted(pending_chunks):
-                req = sched.active[slot]
-                chunk = pending_chunks[slot].pop(0)
-                final = not pending_chunks[slot]
-                tc = self._bucket(len(chunk))
-                buf = np.zeros((1, tc), np.int32)
-                buf[0, :len(chunk)] = chunk
-                sampled_req = (req.sampling is not None
-                               and not req.sampling.greedy)
-                tok, self.caches = self._prefill(
-                    self.params, jnp.asarray(buf), self.caches,
-                    jnp.asarray(slot, jnp.int32),
-                    jnp.asarray(len(chunk), jnp.int32),
-                    resume=req.prefilled > 0,
-                    sampling_row=({k: jnp.asarray(v[slot])
-                                   for k, v in samp.items()}
-                                  if sampled_req else None))
-                req.prefilled += len(chunk)
-                chunks_fed += 1
-                if final:
-                    del pending_chunks[slot]
-                    req.state = RequestState.ACTIVE
+    def tick(self) -> list:
+        """Run one engine iteration; returns (and logs) this tick's local
+        stats vector (see ``telemetry.STATS_FIELDS``). Raises
+        :class:`PoisonedLogits` — committing nothing from the tick — if
+        the decode/verify guard flagged non-finite logits."""
+        eng = self.engine
+        sched = self.sched
+        samp = self.samp
+        now = self.now
+        new_tokens = 0
+        sampled_tokens = 0
+        chunks_fed = 0
+        drafted = 0
+        accepted = 0
+        resumed = 0
+        freed = np.zeros(eng.n_slots, bool)
+
+        # --- admission: grant free slots, stage the chunk plans --------
+        admissions = sched.admit(now, batch_sync=self.static)
+        for slot, req in admissions:
+            history = req.prompt
+            if req.tokens and eng._bounded_ring:
+                # SWA/chunk-bounded rings are chunk-PLAN-deterministic
+                # only: replay the original plan instead (lossy restart —
+                # same stream, more recompute)
+                req.tokens = []
+                req.t_first = None
+            if req.tokens:
+                # exact resume: rebuild the cache over the journal; the
+                # last committed token is re-fed by decode, not re-derived
+                history = req.prompt + tuple(req.tokens[:-1])
+                self._resume_last[slot] = int(req.tokens[-1])
+                resumed += len(req.tokens)
+                req.resumed_tokens += len(req.tokens)
+            self.pending_chunks[slot] = eng._chunk_plan(history)
+            sampling.set_slot(samp, slot, req.sampling)
+            if req.spec is not None:
+                self._ctrls[req.rid] = AdaptiveDraftController(req.spec)
+                eng.drafter.admit(slot, req)
+
+        # --- prefill: one chunk per admitting slot per tick ------------
+        # one single-row call per chunk (cost follows the admitted
+        # prompt, not n_slots); the prompt bucket keeps Tc off the
+        # compile-cache hot path. The final chunk emits the request's
+        # first token (sampled; greedy rows bit-exact argmax) — except on
+        # a resumed slot, whose next token is already in the journal.
+        for slot in sorted(self.pending_chunks):
+            req = sched.active[slot]
+            chunk = self.pending_chunks[slot].pop(0)
+            final = not self.pending_chunks[slot]
+            tc = eng._bucket(len(chunk))
+            buf = np.zeros((1, tc), np.int32)
+            buf[0, :len(chunk)] = chunk
+            sampled_req = (req.sampling is not None
+                           and not req.sampling.greedy
+                           and slot not in self._resume_last)
+            tok, self.caches = eng._prefill(
+                eng.params, jnp.asarray(buf), self.caches,
+                jnp.asarray(slot, jnp.int32),
+                jnp.asarray(len(chunk), jnp.int32),
+                resume=req.prefilled > 0,
+                sampling_row=({k: jnp.asarray(v[slot])
+                               for k, v in samp.items()}
+                              if sampled_req else None))
+            req.prefilled += len(chunk)
+            chunks_fed += 1
+            if final:
+                del self.pending_chunks[slot]
+                req.state = RequestState.ACTIVE
+                if slot in self._resume_last:
+                    # journal is authoritative: discard the re-derived
+                    # token, resume decode from the committed tail
+                    self.last[slot] = self._resume_last.pop(slot)
+                else:
                     tok = int(np.asarray(tok))
                     req.tokens.append(tok)
                     req.t_first = now
-                    last[slot] = tok
+                    self.last[slot] = tok
                     new_tokens += 1
                     if req.sampling is not None and not req.sampling.greedy:
                         sampled_tokens += 1
                     if req.done:
-                        self._release(sched, slot, req, now, freed)
+                        self._release(slot, req, freed)
 
-            # --- draft: propose up to k tokens per speculative slot --------
-            decodable = {slot: req for slot, req in sched.active.items()
-                         if req.state is RequestState.ACTIVE}
-            drafts: dict = {}
+        # --- draft: propose up to k tokens per speculative slot --------
+        decodable = {slot: req for slot, req in sched.active.items()
+                     if req.state is RequestState.ACTIVE}
+        drafts: dict = {}
+        for slot, req in decodable.items():
+            if req.spec is None:
+                continue
+            # never draft past the request's budget: the verify call
+            # emits at most k+1 tokens, and capping k at remaining-1
+            # also keeps every REAL written position inside the ring
+            # bound _check admitted against (pad columns never write —
+            # lengths= suppression inside the verify step)
+            k_eff = min(self._ctrls[req.rid].current_k(), self.k_run,
+                        req.max_new_tokens - len(req.tokens) - 1)
+            if k_eff > 0:
+                d = eng.drafter.propose(slot, req, k_eff)[:k_eff]
+                if d:
+                    drafts[slot] = [int(t) for t in d]
+
+        if decodable:
+            active = np.zeros(eng.n_slots, bool)
+            steps = np.zeros(eng.n_slots, np.int32)
+            any_sampled = False
             for slot, req in decodable.items():
-                if req.spec is None:
-                    continue
-                # never draft past the request's budget: the verify call
-                # emits at most k+1 tokens, and capping k at remaining-1
-                # also keeps every REAL written position inside the ring
-                # bound _check admitted against (pad columns never write —
-                # lengths= suppression inside the verify step)
-                k_eff = min(self._ctrls[req.rid].current_k(), k_run,
-                            req.max_new_tokens - len(req.tokens) - 1)
-                if k_eff > 0:
-                    d = self.drafter.propose(slot, req, k_eff)[:k_eff]
-                    if d:
-                        drafts[slot] = [int(t) for t in d]
-
-            if decodable:
-                active = np.zeros(self.n_slots, bool)
-                steps = np.zeros(self.n_slots, np.int32)
-                any_sampled = False
+                active[slot] = True
+                steps[slot] = len(req.tokens)
+                any_sampled |= (req.sampling is not None
+                                and not req.sampling.greedy)
+            # all-greedy ticks take the argmax-only jitted variant;
+            # the sampled variant's greedy rows are the same argmax,
+            # so mixing never changes a greedy request's stream
+            samp_in = ({"key": jnp.asarray(samp["key"]),
+                        "step": jnp.asarray(steps),
+                        "temperature": jnp.asarray(samp["temperature"]),
+                        "top_k": jnp.asarray(samp["top_k"]),
+                        "top_p": jnp.asarray(samp["top_p"])}
+                       if any_sampled else None)
+            if drafts:
+                # --- verify: score k+1 positions per slot in one pass,
+                # emit the longest committed-stream-matching prefix ----
+                buf = np.zeros((eng.n_slots, self.k_run + 1), np.int32)
+                buf[:, 0] = self.last
+                n_draft = np.zeros(eng.n_slots, np.int32)
+                for slot, d in drafts.items():
+                    buf[slot, 1:1 + len(d)] = d
+                    n_draft[slot] = len(d)
+                out, acc, self.caches = eng._get_verify(self.k_run)(
+                    eng.params, jnp.asarray(buf), self.caches,
+                    jnp.asarray(active), jnp.asarray(n_draft), samp_in)
+                out = np.asarray(out).astype(np.int32)
+                acc = np.asarray(acc).astype(np.int32)
+                self._guard(decodable, [out[s, :acc[s]].min(initial=0)
+                                        for s in decodable])
                 for slot, req in decodable.items():
-                    active[slot] = True
-                    steps[slot] = len(req.tokens)
-                    any_sampled |= (req.sampling is not None
-                                    and not req.sampling.greedy)
-                # all-greedy ticks take the argmax-only jitted variant;
-                # the sampled variant's greedy rows are the same argmax,
-                # so mixing never changes a greedy request's stream
-                samp_in = ({"key": jnp.asarray(samp["key"]),
-                            "step": jnp.asarray(steps),
-                            "temperature": jnp.asarray(samp["temperature"]),
-                            "top_k": jnp.asarray(samp["top_k"]),
-                            "top_p": jnp.asarray(samp["top_p"])}
-                           if any_sampled else None)
-                if drafts:
-                    # --- verify: score k+1 positions per slot in one pass,
-                    # emit the longest committed-stream-matching prefix ----
-                    buf = np.zeros((self.n_slots, k_run + 1), np.int32)
-                    buf[:, 0] = last
-                    n_draft = np.zeros(self.n_slots, np.int32)
-                    for slot, d in drafts.items():
-                        buf[slot, 1:1 + len(d)] = d
-                        n_draft[slot] = len(d)
-                    out, acc, self.caches = self._get_verify(k_run)(
-                        self.params, jnp.asarray(buf), self.caches,
-                        jnp.asarray(active), jnp.asarray(n_draft), samp_in)
-                    out = np.asarray(out).astype(np.int32)
-                    acc = np.asarray(acc).astype(np.int32)
-                    for slot, req in decodable.items():
-                        n = int(acc[slot])
-                        emit = [int(t) for t in out[slot, :n]]
-                        req.tokens.extend(emit)
-                        last[slot] = emit[-1]
-                        new_tokens += len(emit)
-                        if req.sampling is not None \
-                                and not req.sampling.greedy:
-                            sampled_tokens += len(emit)
-                        nd = int(n_draft[slot])
-                        drafted += nd
-                        accepted += n - 1
-                        if req.spec is not None:
-                            self._ctrls[req.rid].update(nd, n - 1)
-                        if req.done:
-                            self._release(sched, slot, req, now, freed)
-                else:
-                    # --- decode: one token per busy slot (no proposals) ----
-                    toks, self.caches = self._decode(
-                        self.params, {"tokens": jnp.asarray(last[:, None])},
-                        self.caches, jnp.asarray(active), samp_in)
-                    toks = np.asarray(toks).astype(np.int32)
-                    for slot, req in decodable.items():
-                        req.tokens.append(int(toks[slot]))
-                        last[slot] = toks[slot]
-                        new_tokens += 1
-                        if req.sampling is not None \
-                                and not req.sampling.greedy:
-                            sampled_tokens += 1
-                        if req.done:
-                            self._release(sched, slot, req, now, freed)
+                    n = int(acc[slot])
+                    emit = [int(t) for t in out[slot, :n]]
+                    req.tokens.extend(emit)
+                    self.last[slot] = emit[-1]
+                    new_tokens += len(emit)
+                    if req.sampling is not None \
+                            and not req.sampling.greedy:
+                        sampled_tokens += len(emit)
+                    nd = int(n_draft[slot])
+                    drafted += nd
+                    accepted += n - 1
+                    if req.spec is not None:
+                        self._ctrls[req.rid].update(nd, n - 1)
+                    if req.done:
+                        self._release(slot, req, freed)
+            else:
+                # --- decode: one token per busy slot (no proposals) ----
+                toks, self.caches = eng._decode(
+                    eng.params, {"tokens": jnp.asarray(self.last[:, None])},
+                    self.caches, jnp.asarray(active), samp_in)
+                toks = np.asarray(toks).astype(np.int32)
+                self._guard(decodable, [toks[s] for s in decodable])
+                for slot, req in decodable.items():
+                    req.tokens.append(int(toks[slot]))
+                    self.last[slot] = toks[slot]
+                    new_tokens += 1
+                    if req.sampling is not None \
+                            and not req.sampling.greedy:
+                        sampled_tokens += 1
+                    if req.done:
+                        self._release(slot, req, freed)
 
-            if freed.any():
-                self.caches = self._reset(self.caches, jnp.asarray(freed))
-                for slot in np.flatnonzero(freed):
-                    sampling.set_slot(samp, int(slot), None)
-            log.step(now, [sched.arrived_depth(now), len(sched.active),
-                           new_tokens, len(admissions), chunks_fed,
-                           sampled_tokens, drafted, accepted])
-            now += 1
+        if freed.any():
+            self.caches = eng._reset(self.caches, jnp.asarray(freed))
+            for slot in np.flatnonzero(freed):
+                sampling.set_slot(samp, int(slot), None)
+        vec = [sched.arrived_depth(now), len(sched.active),
+               new_tokens, len(admissions), chunks_fed,
+               sampled_tokens, drafted, accepted, 0, resumed, 0]
+        self.log.step(now, vec)
+        self.now += 1
+        return vec
 
-        wall = time.perf_counter() - t0
-        report = log.report(sched.finished, wall, now)
-        report["mode"] = "static" if static else "continuous"
+    def _guard(self, decodable, slot_tokens) -> None:
+        """Refuse a tick whose guard flagged non-finite logits: raise with
+        the poisoned slots BEFORE any of the tick's tokens commit."""
+        bad = [slot for slot, tok in zip(decodable, slot_tokens)
+               if int(tok) < 0]
+        if bad:
+            raise PoisonedLogits(bad, [decodable[s].rid for s in bad])
+
+    def abort(self) -> list:
+        """Evict every in-flight request (replica death in the fleet sim);
+        returns them — journals intact — for re-queueing elsewhere."""
+        self.pending_chunks.clear()
+        self._resume_last.clear()
+        return self.sched.drain_active()
+
+    def report(self) -> dict:
+        wall = time.perf_counter() - self._t0
+        log, sched = self.log, self.sched
+        report = log.report(sched.finished, wall, self.now)
+        report["mode"] = "static" if self.static else "continuous"
         report["tokens"] = {r.rid: list(r.tokens) for r in sched.finished}
-        report["sampled_tokens"] = int(sum(s.sampled_tokens
-                                           for s in log.steps))
-        report["prefill_chunks"] = int(sum(s.prefill_chunks
-                                           for s in log.steps))
-        report["drafted_tokens"] = int(sum(s.drafted_tokens
-                                           for s in log.steps))
-        report["accepted_tokens"] = int(sum(s.accepted_tokens
-                                            for s in log.steps))
+        for field in ("sampled_tokens", "prefill_chunks", "drafted_tokens",
+                      "accepted_tokens", "resumed_tokens", "failovers",
+                      "quarantines"):
+            report[field] = int(sum(getattr(s, field) for s in log.steps))
         report["acceptance_rate"] = (
             report["accepted_tokens"] / report["drafted_tokens"]
             if report["drafted_tokens"] else float("nan"))

@@ -45,6 +45,15 @@ class Request:
     verify step accepts only tokens the committed greedy/sampled stream
     would have produced); speculation changes how many ticks the stream
     takes, never its content.
+
+    ``tokens`` doubles as the request's **committed-token journal**: a
+    token is appended exactly when the engine commits it to the stream, so
+    on replica failover the journal survives
+    (``SlotScheduler.requeue_front`` preserves it) and the engine
+    re-admits the orphan by re-prefilling ``prompt + tokens[:-1]`` and
+    resuming decode at ``sampler_cursor`` — the exact-resume invariant of
+    docs/robustness.md. ``failovers``/``resumed_tokens`` count how often
+    that happened to this request (telemetry).
     """
 
     rid: int
@@ -62,6 +71,8 @@ class Request:
     t_admit: int | None = None       # tick the slot was granted
     t_first: int | None = None       # tick the first token was emitted
     t_done: int | None = None        # tick generation completed
+    failovers: int = 0               # times re-queued off a dead replica
+    resumed_tokens: int = 0          # journal tokens replayed across resumes
 
     def __post_init__(self):
         self.prompt = tuple(int(t) for t in self.prompt)
@@ -73,6 +84,18 @@ class Request:
     @property
     def done(self) -> bool:
         return len(self.tokens) >= self.max_new_tokens
+
+    @property
+    def committed(self) -> tuple:
+        """The committed-token journal (immutable view of ``tokens``)."""
+        return tuple(self.tokens)
+
+    @property
+    def sampler_cursor(self) -> int:
+        """The next token index — the ``fold_in(seed, i)`` key cursor.
+        Scheduling-independent by the sampling determinism contract, so a
+        resumed request keeps sampling the undisturbed stream."""
+        return len(self.tokens)
 
     @property
     def ttft(self) -> int | None:

@@ -44,11 +44,16 @@ class SlotScheduler:
             raise ValueError(f"request {req.rid} is {req.state}, not QUEUED")
         self._queue.append(req)
 
-    def requeue_front(self, reqs) -> None:
+    def requeue_front(self, reqs, exact: bool = True) -> None:
         """Push failed-over requests at the FRONT of the queue (fleet
         failover: a dead replica's work must not lose its place in line).
-        Their generation restarts from the prompt — slots are request-local
-        state, and the dead replica's cache rows died with it.
+        Slots are device state and died with the replica, but by default
+        (``exact=True``) each request KEEPS its committed-token journal
+        (``req.tokens``) and first-token timestamp: the engine re-admits it
+        through the chunked-prefill machinery over ``prompt + committed``
+        and the merged stream is bit-identical to an undisturbed run
+        (docs/robustness.md). ``exact=False`` is the legacy lossy restart —
+        the journal is discarded and generation restarts from the prompt.
 
         Requests are re-queued in their ORIGINAL arrival order (ties by
         rid), not in the caller's iteration order: when several replicas
@@ -60,10 +65,23 @@ class SlotScheduler:
         for req in reversed(ordered):
             req.state = RequestState.QUEUED
             req.slot = None
-            req.tokens = []
             req.prefilled = 0
-            req.t_admit = req.t_first = req.t_done = None
+            req.t_admit = req.t_done = None
+            if not exact or not req.tokens:
+                req.tokens = []
+                req.t_first = None
             self._queue.appendleft(req)
+
+    def steal_queued(self, n: int) -> list:
+        """Pop up to ``n`` requests from the BACK of the queue (the ones
+        admitted last anyway) for re-balancing onto a rejoined replica.
+        FIFO order is preserved both here and among the stolen set —
+        nothing overtakes anything; work just changes lanes."""
+        out = []
+        while self._queue and len(out) < n:
+            out.append(self._queue.pop())
+        out.reverse()
+        return out
 
     # ------------------------------------------------------------ queries
     @property

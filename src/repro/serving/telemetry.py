@@ -41,9 +41,20 @@ from repro.core.collectives import CollectiveConfig, all_reduce
 #                    view of it costs the SAME b=1 reduction the other
 #                    counters already ride (the vector grows by 8 bytes,
 #                    the alpha*log p latency term is unchanged)
+#   failovers      — requests re-queued off a dead/quarantined replica this
+#                    tick (control-plane events: counted by the fleet, 0 on
+#                    a standalone engine's own row)
+#   resumed_tokens — committed tokens replayed through the exact-resume
+#                    re-prefill at (re-)admissions this tick — the journal
+#                    restore cost, and the number that proves failover lost
+#                    nothing (docs/robustness.md)
+#   quarantines    — replicas quarantined this tick by the non-finite
+#                    decode-logits guard (poisoned work failed over, never
+#                    committed)
 STATS_FIELDS = ("queue_depth", "active_slots", "new_tokens", "prefills",
                 "prefill_chunks", "sampled_tokens", "drafted_tokens",
-                "accepted_tokens")
+                "accepted_tokens", "failovers", "resumed_tokens",
+                "quarantines")
 
 # b=1: latency-bound single-block pipeline; "auto": measured autotuner hit
 # if one exists for this (p, nbytes, dtype, fabric), else the cost-model
@@ -107,6 +118,9 @@ class StepStats:
     sampled_tokens: float = 0.0
     drafted_tokens: float = 0.0
     accepted_tokens: float = 0.0
+    failovers: float = 0.0
+    resumed_tokens: float = 0.0
+    quarantines: float = 0.0
 
 
 class TelemetryLog:

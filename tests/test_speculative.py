@@ -184,7 +184,7 @@ def test_spec_telemetry_counters_ride_the_stats_vector():
     """drafted/accepted counters land in STATS_FIELDS and the report, and
     per-tick rows sum to the report totals."""
     from repro.serving import STATS_FIELDS
-    assert STATS_FIELDS[-2:] == ("drafted_tokens", "accepted_tokens")
+    assert STATS_FIELDS[6:8] == ("drafted_tokens", "accepted_tokens")
     _, eng = make_engine(n_slots=2, max_len=64)
     rep = eng.run([Request(0, REP_PROMPT, max_new_tokens=16,
                            spec=SpecParams(draft_k=4))])
