@@ -3,8 +3,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test test-fast test-chaos docs-check docs-links bench \
-	bench-collectives bench-serving
+.PHONY: verify test test-fast test-chaos test-serving docs-check docs-links \
+	bench bench-collectives bench-serving
 
 verify:
 	$(PY) -m pytest -x -q
@@ -19,6 +19,13 @@ test-fast:
 # rejoin, quarantine (already included in `make verify`'s full pytest run)
 test-chaos:
 	$(PY) -m pytest tests/test_chaos.py -q
+
+# serving + scheduling suites only: engine, speculative decoding, SLO
+# policies/preemption, property-based scheduler invariants
+test-serving:
+	$(PY) -m pytest tests/test_serving.py tests/test_speculative.py \
+		tests/test_slo.py tests/test_scheduling_props.py \
+		tests/test_chaos.py -q
 
 docs-check:
 	$(PY) tools/check_docs.py

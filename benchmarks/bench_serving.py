@@ -42,6 +42,15 @@ SPEC_N_REQUESTS = 8
 SPEC_MAX_LEN = 96
 SPEC_K = 4
 
+# --slo scenario: seeded bursty mixed-class trace (serving/traces.py),
+# FIFO vs the SLO policy on the SAME engine and trace. The SLO win is
+# deterministic — interactive p99 TTFT in ticks — and preempted batch
+# streams must stay bit-identical to their FIFO (undisturbed) counterparts.
+SLO_N_REQUESTS = 24
+SLO_N_SLOTS = 4
+SLO_MAX_LEN = 80
+SLO_AGE_TICKS = 32
+
 # --chaos scenario: seeded replica kill + rejoin mid-run across a 2-replica
 # fleet; the flap outlives the death threshold (replica 1 dies at ~tick 8,
 # resumes beating at tick 18, rejoins after probation) so ONE run exercises
@@ -120,10 +129,11 @@ def run(csv_out):
             f"static={stat['latency_ticks_p95']:.1f}")
     long_rows = run_long_prompt(csv_out)
     spec_rows = run_speculative(csv_out)
+    slo_rows = run_slo(csv_out)
     chaos_rows = run_chaos(csv_out)
     return {"speedup": speedup, "continuous": cont, "static": stat,
             "long_prompt": long_rows, "speculative": spec_rows,
-            "chaos": chaos_rows}
+            "slo": slo_rows, "chaos": chaos_rows}
 
 
 def run_long_prompt(csv_out):
@@ -234,6 +244,82 @@ def run_speculative(csv_out):
     return {"plain": plain, "speculative": fast, "acceptance_rate": rate}
 
 
+def run_slo(csv_out):
+    """SLO scenario (docs/scheduling.md): a seeded bursty trace with mixed
+    priority classes (interactive with tight TTFT deadlines, batch,
+    best-effort scavengers) served twice on the same engine — FIFO
+    reference vs the SLO policy (aged priorities, deadline shedding,
+    exact-resume preemption). Everything asserted is in TICKS, the
+    deterministic scheduling clock: the interactive p99-TTFT margin is an
+    exact integer reproducible on any host, and every request both
+    policies finish must emit bit-identical tokens — preemption moves
+    WHEN tokens land, never WHAT."""
+    from repro.serving import SLOPolicy, TraceSpec, generate_trace
+
+    cfg, engine = _build_engine(max_len=SLO_MAX_LEN, n_slots=SLO_N_SLOTS)
+    spec = TraceSpec(n_requests=SLO_N_REQUESTS, gap_mean=4.0, burst_mean=5.0,
+                     prompt_median=6.0, out_median=10.0,
+                     max_prompt=14, max_out=24)
+
+    def trace():
+        return generate_trace(spec, cfg.vocab_size, seed=41)
+
+    def policy():
+        return SLOPolicy(age_ticks=SLO_AGE_TICKS)
+
+    # compile prefill buckets + decode outside the clock
+    engine.run(trace()[:2])
+
+    fifo = engine.run(trace())
+    slo = engine.run(trace(), policy=policy())
+    # tick-count gates must be wall-clock-independent: a second run of the
+    # same seeded trace must reproduce every deterministic number exactly
+    slo2 = engine.run(trace(), policy=policy())
+    for k in ("ticks", "preemptions", "shed_requests", "deadline_misses"):
+        assert slo[k] == slo2[k], f"{k} not deterministic: " \
+            f"{slo[k]} != {slo2[k]}"
+    # repr-compare: classes with no deadlines carry NaN hit rates, and
+    # NaN != NaN would fail a plain dict equality
+    assert repr(slo["slo"]) == repr(slo2["slo"]), \
+        "SLO report not deterministic"
+
+    # streams: every request finished by BOTH policies must match exactly
+    # (the SLO run may shed best-effort work FIFO grinds through)
+    common = set(fifo["tokens"]) & set(slo["tokens"])
+    diverged = sum(fifo["tokens"][rid] != slo["tokens"][rid]
+                   for rid in common)
+    assert diverged == 0, f"{diverged} preempted streams diverged"
+    assert slo["preemptions"] > 0, \
+        "the bursty trace must actually exercise preemption"
+
+    f_int = fifo["slo"]["interactive"]
+    s_int = slo["slo"]["interactive"]
+    margin = f_int["ttft_ticks_p99"] - s_int["ttft_ticks_p99"]
+    assert margin > 0, \
+        f"SLO policy must beat FIFO on interactive p99 TTFT " \
+        f"(fifo={f_int['ttft_ticks_p99']} slo={s_int['ttft_ticks_p99']})"
+    assert s_int["deadline_hit_rate"] >= f_int["deadline_hit_rate"], \
+        "SLO policy must not hit fewer interactive deadlines than FIFO"
+
+    csv_out("serving_slo_interactive_p99_ttft",
+            f"{s_int['ttft_ticks_p99']:.1f}",
+            f"fifo={f_int['ttft_ticks_p99']:.1f} ticks (deterministic)")
+    csv_out("serving_slo_ttft_margin_ticks", f"{margin:.1f}",
+            f"interactive p99, n={SLO_N_REQUESTS} slots={SLO_N_SLOTS} "
+            f"(deterministic)")
+    csv_out("serving_slo_deadline_hit_rate",
+            f"{s_int['deadline_hit_rate']:.2f}",
+            f"fifo={f_int['deadline_hit_rate']:.2f} (interactive)")
+    csv_out("serving_slo_preemptions", f"{slo['preemptions']}",
+            f"resumed_tokens={slo['resumed_tokens']} (exact resume)")
+    csv_out("serving_slo_shed", f"{slo['shed_requests']}",
+            f"deadline_misses={slo['deadline_misses']}")
+    csv_out("serving_slo_diverged", "0",
+            f"{len(common)} streams finished under both policies "
+            "bit-identical (deterministic)")
+    return {"fifo": fifo, "slo": slo, "margin": margin}
+
+
 def run_chaos(csv_out):
     """Chaos scenario (docs/robustness.md): a replica is killed mid-run by
     an over-threshold heartbeat flap, its in-flight work fails over with
@@ -300,6 +386,10 @@ def main(argv=None) -> int:
                     help="run only the chunked long-prompt scenario")
     ap.add_argument("--speculative", action="store_true",
                     help="run only the speculative-decoding scenario")
+    ap.add_argument("--slo", action="store_true",
+                    help="run only the SLO scenario (bursty mixed-class "
+                         "trace, FIFO vs priority policy, deterministic "
+                         "p99-TTFT margin, exact-resume preemption)")
     ap.add_argument("--chaos", action="store_true",
                     help="run only the chaos scenario (replica kill + "
                          "rejoin mid-run, zero token divergence)")
@@ -319,6 +409,8 @@ def main(argv=None) -> int:
         fn = run_long_prompt
     elif args.speculative:
         fn = run_speculative
+    elif args.slo:
+        fn = run_slo
     elif args.chaos:
         fn = run_chaos
     fn(csv_out)

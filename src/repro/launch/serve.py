@@ -23,6 +23,14 @@ or a second reduced model via --draft-model:
   PYTHONPATH=src python -m repro.launch.serve --arch minicpm_2b --reduced \
       --speculate --draft-k 4 --requests 8 --slots 4
 
+SLO mode (docs/scheduling.md) runs the priority policy — aging, deadline
+shedding, and exact-resume preemption — instead of FIFO; --priority and
+--deadline-ticks attach SLO metadata to every synthetic request:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch minicpm_2b --reduced \
+      --policy slo --priority interactive --deadline-ticks 24 \
+      --requests 8 --slots 2 --arrival-gap 1
+
 Chaos mode (docs/robustness.md) serves the same workload across a replica
 fleet under a seeded fault plan — replica kills, heartbeat flaps,
 stragglers, poisoned logits — and proves the merged streams match an
@@ -54,7 +62,8 @@ from repro.models import transformer as tf
 
 def synthetic_workload(n: int, vocab: int, *, gap: int = 2, seed: int = 0,
                        prompt_lens=(3, 12), max_new=(4, 24),
-                       sampling=None, spec=None, repetitive=False) -> list:
+                       sampling=None, spec=None, repetitive=False,
+                       slo=None) -> list:
     """Deterministic staggered-arrival request stream (bench + CLI).
 
     ``sampling`` is a base :class:`~repro.serving.sampling.SamplingParams`
@@ -65,6 +74,9 @@ def synthetic_workload(n: int, vocab: int, *, gap: int = 2, seed: int = 0,
     tiny per-request token alphabet instead of sampling i.i.d. — the
     structured-text stand-in the prompt-lookup drafter can actually draft
     from (an i.i.d. prompt has no recurring n-grams by construction).
+    ``slo`` is a :class:`~repro.serving.slo.SLOParams` every request
+    carries (None = plain FIFO metadata); for per-class MIXES use
+    :func:`repro.serving.traces.generate_trace` instead.
     """
     import dataclasses as _dc
 
@@ -85,16 +97,17 @@ def synthetic_workload(n: int, vocab: int, *, gap: int = 2, seed: int = 0,
                 arrival=i * gap,
                 sampling=(None if sampling is None else
                           _dc.replace(sampling, seed=sampling.seed + i)),
-                spec=spec)
+                spec=spec,
+                slo=slo)
         for i in range(n)
     ]
 
 
 def serve_continuous(args):
     """Drive the continuous-batching engine on a synthetic workload."""
-    from repro.serving import (DraftModelDrafter, SamplingParams,
-                               ServingEngine, SpecParams,
-                               make_stats_reducer)
+    from repro.serving import (DraftModelDrafter, PriorityClass,
+                               SamplingParams, ServingEngine, SLOParams,
+                               SpecParams, make_policy, make_stats_reducer)
     mesh_shape = tuple(int(x) for x in args.mesh.split("x"))
     axes = ("data", "model")[-len(mesh_shape):]
     mesh = make_mesh(mesh_shape, axes)
@@ -127,24 +140,37 @@ def serve_continuous(args):
     spec = None
     if args.speculate or args.draft_model:
         spec = SpecParams(draft_k=args.draft_k)
+    slo = None
+    if args.priority is not None or args.deadline_ticks is not None:
+        slo = SLOParams(
+            priority=PriorityClass[(args.priority or "batch").upper()],
+            deadline_ticks=args.deadline_ticks)
     reqs = synthetic_workload(args.requests, cfg.vocab_size,
                               gap=args.arrival_gap, seed=args.seed + 1,
                               prompt_lens=tuple(args.prompt_len),
                               sampling=sampling, spec=spec,
                               repetitive=spec is not None
-                              and not args.draft_model)
-    report = engine.run(reqs, static=args.static)
+                              and not args.draft_model,
+                              slo=slo)
+    policy = make_policy(args.policy) if args.policy != "fifo" else None
+    report = engine.run(reqs, static=args.static, policy=policy)
     spec_note = (f", {report['accepted_tokens']}/"
                  f"{report['drafted_tokens']} drafts accepted"
                  if report["drafted_tokens"] else "")
-    print(f"[{report['mode']}] {report['requests']} requests, "
+    slo_note = (f", {report['preemptions']} preemptions, "
+                f"{report['shed_requests']} shed, "
+                f"{report['deadline_misses']} deadline misses"
+                if report["policy"] != "fifo" else "")
+    print(f"[{report['mode']}/{report['policy']}] "
+          f"{report['requests']} requests, "
           f"{report['total_tokens']} tokens "
           f"({report['sampled_tokens']} sampled, "
           f"{report['prefill_chunks']} prefill chunks{spec_note}) "
           f"in {report['wall_s']:.2f}s "
           f"({report['tok_s']:.1f} tok/s, {report['ticks']} ticks, "
           f"ttft p50 {report['ttft_ticks_p50']:.1f} ticks, "
-          f"latency p95 {report['latency_ticks_p95']:.1f} ticks)")
+          f"latency p95 {report['latency_ticks_p95']:.1f} ticks"
+          f"{slo_note})")
     return report
 
 
@@ -297,6 +323,20 @@ def main(argv=None):
                     help="continuous mode: draft with this REDUCED arch as "
                          "the draft model instead of prompt lookup "
                          "(implies --speculate; vocab must match)")
+    ap.add_argument("--policy", choices=("fifo", "slo"), default="fifo",
+                    help="continuous mode: scheduling policy — 'fifo' (the "
+                         "reference) or 'slo' (priority classes, aging, "
+                         "deadline shedding, exact-resume preemption; see "
+                         "docs/scheduling.md; implies --continuous)")
+    ap.add_argument("--priority", default=None,
+                    choices=("interactive", "batch", "best_effort"),
+                    help="continuous mode: priority class every synthetic "
+                         "request carries (default: no SLO metadata; for "
+                         "per-class mixes use serving.traces)")
+    ap.add_argument("--deadline-ticks", type=int, default=None,
+                    help="continuous mode: TTFT deadline in ticks relative "
+                         "to each request's arrival (>= 1; misses are "
+                         "counted in telemetry)")
     ap.add_argument("--autotune-cache", default=None, metavar="PATH",
                     help="per-deployment autotune cache file; overrides "
                          "REPRO_AUTOTUNE_CACHE and the XDG default (what "
@@ -324,7 +364,9 @@ def main(argv=None):
         autotune.set_cache_path(args.autotune_cache)
     if args.chaos_seed is not None:
         return serve_chaos(args)
-    if args.continuous or args.static or args.speculate or args.draft_model:
+    if args.continuous or args.static or args.speculate or args.draft_model \
+            or args.policy != "fifo" or args.priority is not None \
+            or args.deadline_ticks is not None:
         return serve_continuous(args)
     return serve_loop(args)
 
@@ -360,6 +402,16 @@ def _validate_args(ap, args) -> None:
                  f"got {args.heartbeat_misses}")
     if args.rejoin_backoff < 0:
         ap.error(f"--rejoin-backoff must be >= 0, got {args.rejoin_backoff}")
+    if args.deadline_ticks is not None and args.deadline_ticks < 1:
+        ap.error(f"--deadline-ticks must be >= 1, got {args.deadline_ticks}")
+    if args.policy != "fifo":
+        if args.static:
+            ap.error("--policy slo is incompatible with --static: static "
+                     "batching IS the batch-synchronous FIFO reference")
+        if args.chaos_seed is not None:
+            ap.error("--policy slo is incompatible with --chaos-seed: the "
+                     "fleet's exact-resume accounting assumes FIFO "
+                     "(shedding would strand the run-to-completion loop)")
     if args.chaos_seed is not None:
         if args.replicas < 2:
             ap.error(f"--chaos-seed needs --replicas >= 2, "

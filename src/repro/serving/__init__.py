@@ -4,10 +4,17 @@ Layer map (see docs/serving.md for the request lifecycle and DESIGN.md for
 the dataflow diagram):
 
   request.py    — Request objects + lifecycle
-                  (QUEUED -> PREFILLING -> ACTIVE -> DONE)
-  scheduler.py  — FIFO admission into cache slots (+ the static policy)
+                  (QUEUED -> PREFILLING -> ACTIVE -> DONE, with SHED and
+                  preemption bounce-back under SLO policies)
+  slo.py        — scheduling policies: FIFO reference + SLO (priority
+                  classes, aging, deadline shedding, preemption plans)
+  scheduler.py  — policy-driven admission into cache slots (+ the static
+                  batch-sync reference mode), preempt/shed mechanisms
+  traces.py     — seeded synthetic workload traces (bursty arrivals,
+                  heavy-tailed lengths, per-class mixes)
   engine.py     — the engine loop over the slot-aware prefill/decode steps
-                  (chunked long-prompt admission, SSM-aware prefill)
+                  (chunked long-prompt admission, SSM-aware prefill,
+                  exact-resume preemption)
   sampling.py   — temperature/top-k/top-p with per-request seeded keys;
                   greedy is the bit-exact default
   speculative.py— speculative decoding: drafter protocol (n-gram prompt
@@ -26,12 +33,17 @@ from repro.serving.request import Request, RequestState
 from repro.serving.sampling import (GREEDY, SamplingParams, sample_tokens,
                                     sample_tokens_block)
 from repro.serving.scheduler import SlotScheduler
+from repro.serving.slo import (FIFOPolicy, PriorityClass, SchedulingPolicy,
+                               SLOParams, SLOPolicy, deadline_met,
+                               make_policy, slo_report)
 from repro.serving.speculative import (MAX_DRAFT_K, AdaptiveDraftController,
                                        Drafter, DraftModelDrafter,
                                        NgramDrafter, SpecParams)
 from repro.serving.telemetry import (STATS_COLLECTIVE, STATS_FIELDS,
                                      StepStats, TelemetryLog,
-                                     make_stats_reducer)
+                                     make_stats_reducer, stats_vector)
+from repro.serving.traces import (DEFAULT_MIX, ClassSpec, TraceSpec,
+                                  generate_trace, trace_summary)
 
 __all__ = [
     "ServingEngine", "EngineSession", "PoisonedLogits",
@@ -41,5 +53,10 @@ __all__ = [
     "SamplingParams", "GREEDY", "sample_tokens", "sample_tokens_block",
     "SpecParams", "Drafter", "NgramDrafter", "DraftModelDrafter",
     "AdaptiveDraftController", "MAX_DRAFT_K",
+    "PriorityClass", "SLOParams", "SchedulingPolicy", "FIFOPolicy",
+    "SLOPolicy", "make_policy", "deadline_met", "slo_report",
+    "TraceSpec", "ClassSpec", "DEFAULT_MIX", "generate_trace",
+    "trace_summary",
     "make_stats_reducer", "STATS_FIELDS", "STATS_COLLECTIVE",
+    "stats_vector",
 ]

@@ -59,9 +59,10 @@ from repro.models import transformer as tf
 from repro.serving import sampling
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import SlotScheduler
+from repro.serving.slo import slo_report
 from repro.serving.speculative import (AdaptiveDraftController, NgramDrafter,
                                        SpecParams)
-from repro.serving.telemetry import TelemetryLog
+from repro.serving.telemetry import TelemetryLog, stats_vector
 
 
 def _pow2_at_least(n: int, floor: int) -> int:
@@ -208,17 +209,20 @@ class ServingEngine:
         return [prompt[i:i + c] for i in range(0, len(prompt), c)]
 
     # ---------------------------------------------------------------- run
-    def start(self, requests=(), *, static: bool = False) -> "EngineSession":
+    def start(self, requests=(), *, static: bool = False,
+              policy=None) -> "EngineSession":
         """Open an :class:`EngineSession` — the tick-stepping form of
         :meth:`run`. The session owns its caches, scheduler, and sampler
         state, so several sessions can share one engine's compiled steps
         (the fleet simulation runs one session per replica); more requests
         may be submitted while the session runs (failover re-admission).
+        ``policy`` is a :class:`~repro.serving.slo.SchedulingPolicy`
+        (None = the FIFO reference).
         """
-        return EngineSession(self, requests, static=static)
+        return EngineSession(self, requests, static=static, policy=policy)
 
     def run(self, requests, *, static: bool = False,
-            max_ticks: int = 100_000) -> dict:
+            max_ticks: int = 100_000, policy=None) -> dict:
         """Serve ``requests`` to completion; returns the telemetry report.
 
         ``static=True`` runs the batch-synchronous reference policy (admit
@@ -226,9 +230,12 @@ class ServingEngine:
         jitted steps. Token streams are identical either way — each batch
         row's computation depends only on its own request, chunk plans and
         sampler keys only on the request itself — so the policies differ
-        exactly in scheduling: slot occupancy, TTFT, and wall time.
+        exactly in scheduling: slot occupancy, TTFT, and wall time. The
+        same stream invariant holds for any ``policy``
+        (:mod:`repro.serving.slo`): preemption journals and resumes
+        exactly, so policies change WHEN tokens land, never WHAT.
         """
-        session = self.start(requests, static=static)
+        session = self.start(requests, static=static, policy=policy)
         while session.running:
             if session.now >= max_ticks:
                 raise RuntimeError(f"serving stalled after {max_ticks} ticks")
@@ -280,10 +287,14 @@ class EngineSession:
     """
 
     def __init__(self, engine: ServingEngine, requests=(), *,
-                 static: bool = False):
+                 static: bool = False, policy=None):
+        if static and policy is not None and policy.name != "fifo":
+            raise ValueError(
+                "static batching is the batch-synchronous FIFO reference; "
+                f"it is not defined for policy {policy.name!r}")
         self.engine = engine
         self.static = static
-        self.sched = SlotScheduler(engine.n_slots)
+        self.sched = SlotScheduler(engine.n_slots, policy=policy)
         self.k_run = 0
         self._ctrls: dict = {}
         self.caches = jax.device_put(
@@ -346,7 +357,34 @@ class EngineSession:
         drafted = 0
         accepted = 0
         resumed = 0
+        deadline_misses = 0
         freed = np.zeros(eng.n_slots, bool)
+
+        # --- SLO hooks: shed hopeless queued work, then evict slots the
+        # policy wants for waiting higher-priority requests. Both are
+        # no-ops under the FIFO reference policy. Eviction happens BEFORE
+        # admission so a freed slot is re-granted in the same tick, and
+        # the evicted rows are reset immediately (not at end-of-tick with
+        # ``freed``) so the incoming request prefills into a clean slot.
+        shed_now = sched.shed(now)
+        for req in shed_now:
+            if req.deadline is not None and not req.deadline_counted:
+                req.deadline_counted = True
+                deadline_misses += 1
+        preempt_slots = sched.plan_preemptions(now)
+        if preempt_slots:
+            mask = np.zeros(eng.n_slots, bool)
+            for slot in preempt_slots:
+                req = sched.active[slot]
+                self.pending_chunks.pop(slot, None)
+                self._resume_last.pop(slot, None)
+                sampling.set_slot(samp, slot, None)
+                if req.spec is not None:
+                    eng.drafter.release(slot)
+                    self._ctrls.pop(req.rid, None)
+                sched.preempt(slot, now)
+                mask[slot] = True
+            self.caches = eng._reset(self.caches, jnp.asarray(mask))
 
         # --- admission: grant free slots, stage the chunk plans --------
         admissions = sched.admit(now, batch_sync=self.static)
@@ -408,6 +446,10 @@ class EngineSession:
                     tok = int(np.asarray(tok))
                     req.tokens.append(tok)
                     req.t_first = now
+                    if req.deadline is not None \
+                            and not req.deadline_counted and now > req.deadline:
+                        req.deadline_counted = True
+                        deadline_misses += 1
                     self.last[slot] = tok
                     new_tokens += 1
                     if req.sampling is not None and not req.sampling.greedy:
@@ -505,9 +547,25 @@ class EngineSession:
             self.caches = eng._reset(self.caches, jnp.asarray(freed))
             for slot in np.flatnonzero(freed):
                 sampling.set_slot(samp, int(slot), None)
-        vec = [sched.arrived_depth(now), len(sched.active),
-               new_tokens, len(admissions), chunks_fed,
-               sampled_tokens, drafted, accepted, 0, resumed, 0]
+        # build the stats row BY NAME through the drift guard: a counter
+        # added here but not to STATS_FIELDS (or vice versa) fails on the
+        # first tick instead of silently skewing the b=1 fleet reduction
+        vec = stats_vector({
+            "queue_depth": sched.arrived_depth(now),
+            "active_slots": len(sched.active),
+            "new_tokens": new_tokens,
+            "prefills": len(admissions),
+            "prefill_chunks": chunks_fed,
+            "sampled_tokens": sampled_tokens,
+            "drafted_tokens": drafted,
+            "accepted_tokens": accepted,
+            "failovers": 0,       # control-plane: counted by the fleet
+            "resumed_tokens": resumed,
+            "quarantines": 0,     # control-plane: counted by the fleet
+            "preemptions": len(preempt_slots),
+            "shed_requests": len(shed_now),
+            "deadline_misses": deadline_misses,
+        })
         self.log.step(now, vec)
         self.now += 1
         return vec
@@ -535,9 +593,12 @@ class EngineSession:
         report["tokens"] = {r.rid: list(r.tokens) for r in sched.finished}
         for field in ("sampled_tokens", "prefill_chunks", "drafted_tokens",
                       "accepted_tokens", "resumed_tokens", "failovers",
-                      "quarantines"):
+                      "quarantines", "preemptions", "shed_requests",
+                      "deadline_misses"):
             report[field] = int(sum(getattr(s, field) for s in log.steps))
         report["acceptance_rate"] = (
             report["accepted_tokens"] / report["drafted_tokens"]
             if report["drafted_tokens"] else float("nan"))
+        report["policy"] = sched.policy.name
+        report["slo"] = slo_report(sched.finished + sched.shed_requests)
         return report

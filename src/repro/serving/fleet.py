@@ -414,7 +414,8 @@ class FleetRunner:
         report["tokens"] = {r.rid: list(r.tokens) for r in self.finished}
         for field in ("sampled_tokens", "prefill_chunks", "drafted_tokens",
                       "accepted_tokens", "resumed_tokens", "failovers",
-                      "quarantines"):
+                      "quarantines", "preemptions", "shed_requests",
+                      "deadline_misses"):
             report[field] = int(sum(getattr(s, field)
                                     for s in self.log.steps))
         report["rejoins"] = self._rejoins

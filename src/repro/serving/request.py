@@ -4,7 +4,11 @@ A request is born QUEUED, becomes PREFILLING when the admission scheduler
 packs it into a KV-cache slot (its prompt starts streaming into the slot,
 one chunk per engine tick for prompts longer than the prefill chunk),
 becomes ACTIVE the tick its final prompt chunk lands and its first token is
-emitted, and becomes DONE when it has generated ``max_new_tokens``.
+emitted, and becomes DONE when it has generated ``max_new_tokens``. Under
+an overloaded :class:`~repro.serving.slo.SLOPolicy` a queued request may
+instead be SHED — dropped unserved (it never held a slot) — and a
+PREFILLING/ACTIVE request may bounce back to QUEUED when preempted for
+higher-priority work (journal intact; it later resumes bit-identically).
 Short prompts pass through PREFILLING and ACTIVE in the same tick — the
 one-chunk case is just a chunk plan of length one. Timestamps are recorded
 in both clocks the engine runs: *ticks* (the virtual scheduling clock — one
@@ -19,6 +23,7 @@ import dataclasses
 import enum
 
 from repro.serving.sampling import SamplingParams
+from repro.serving.slo import SLOParams, req_deadline
 from repro.serving.speculative import SpecParams
 
 
@@ -27,6 +32,7 @@ class RequestState(enum.Enum):
     PREFILLING = "prefilling"  # slot granted; prompt chunks streaming in
     ACTIVE = "active"      # fully prefilled; first token emitted; decoding
     DONE = "done"          # generated max_new_tokens; slot released
+    SHED = "shed"          # dropped unserved by the overload policy
 
 
 @dataclasses.dataclass
@@ -44,7 +50,11 @@ class Request:
     speculative decoding — the emitted stream is identical either way (the
     verify step accepts only tokens the committed greedy/sampled stream
     would have produced); speculation changes how many ticks the stream
-    takes, never its content.
+    takes, never its content. ``slo`` is None for plain FIFO service or an
+    :class:`~repro.serving.slo.SLOParams` carrying the request's priority
+    class, TTFT deadline, and preemptibility — like speculation, scheduling
+    policy changes WHEN tokens are emitted, never WHAT (a preempted request
+    resumes bit-identically from its journal; see docs/scheduling.md).
 
     ``tokens`` doubles as the request's **committed-token journal**: a
     token is appended exactly when the engine commits it to the stream, so
@@ -62,6 +72,7 @@ class Request:
     arrival: int = 0
     sampling: SamplingParams | None = None
     spec: SpecParams | None = None
+    slo: SLOParams | None = None     # priority class + TTFT deadline
 
     # runtime fields, owned by the scheduler/engine
     state: RequestState = RequestState.QUEUED
@@ -73,6 +84,8 @@ class Request:
     t_done: int | None = None        # tick generation completed
     failovers: int = 0               # times re-queued off a dead replica
     resumed_tokens: int = 0          # journal tokens replayed across resumes
+    preemptions: int = 0             # times evicted mid-flight for priority
+    deadline_counted: bool = dataclasses.field(default=False, repr=False)
 
     def __post_init__(self):
         self.prompt = tuple(int(t) for t in self.prompt)
@@ -106,3 +119,9 @@ class Request:
     def latency(self) -> int | None:
         """End-to-end latency in ticks."""
         return None if self.t_done is None else self.t_done - self.arrival
+
+    @property
+    def deadline(self) -> int | None:
+        """Absolute TTFT deadline tick (``arrival + slo.deadline_ticks``),
+        or None for deadline-free requests."""
+        return req_deadline(self)

@@ -1,23 +1,31 @@
 """Admission scheduling: pack queued requests into KV-cache slots.
 
 The scheduler owns the queue and the slot table; the engine owns the device
-caches. Invariants (tested in tests/test_serving.py):
+caches; a pluggable :class:`~repro.serving.slo.SchedulingPolicy` owns the
+*decisions* (who admits next, who is shed, who is preempted). Invariants
+(tested in tests/test_serving.py and tests/test_scheduling_props.py):
 
 * **no double-booking** — a slot holds at most one PREFILLING/ACTIVE
-  request, and a request at most one slot;
-* **FIFO fairness** — requests are admitted strictly in queue order: a
-  request that has not arrived yet blocks everything behind it (no
-  skip-ahead, so a long-prompt request cannot starve). Chunked prefill
-  does not bend this: a long prompt occupies exactly one slot while its
-  chunks stream in, and the requests behind it admit into the OTHER free
-  slots in order, same as ever;
-* **freed-slot reuse** — releasing a slot makes it immediately admissible
-  again, with no device-side reallocation (the per-slot ``pos`` reset in
-  the cache is what makes reuse safe without re-jitting).
+  request, and a request at most one slot — under any policy, any
+  interleaving of admit/preempt/release;
+* **policy-faithful admission** — ``admit`` grants free slots to exactly
+  the prefix of ``policy.admission_order``: the default
+  :class:`~repro.serving.slo.FIFOPolicy` keeps the PR-3 semantics (strict
+  queue order; a request that has not arrived yet blocks everything behind
+  it — no skip-ahead, so a long-prompt request cannot starve), while
+  :class:`~repro.serving.slo.SLOPolicy` orders by aged priority so a
+  ready higher-priority request is never skipped and no class starves;
+* **freed-slot reuse** — releasing (or preempting) a slot makes it
+  immediately admissible again, with no device-side reallocation;
+* **journaled eviction** — ``preempt`` and ``requeue_front`` keep the
+  request's committed-token journal and first-token timestamp, so
+  re-admission resumes the stream bit-identically (docs/robustness.md,
+  docs/scheduling.md).
 
 The ``batch_sync`` admission mode is the classic static-batching policy the
 benchmark compares against: wait until the *next whole batch* of requests
-has arrived AND every slot is free, then admit all of them at once.
+has arrived AND every slot is free, then admit all of them at once. It is
+defined only for the FIFO reference policy.
 """
 
 from __future__ import annotations
@@ -25,18 +33,21 @@ from __future__ import annotations
 from collections import deque
 
 from repro.serving.request import Request, RequestState
+from repro.serving.slo import FIFOPolicy, SchedulingPolicy
 
 
 class SlotScheduler:
     """Queue + slot table for one serving replica."""
 
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, policy: SchedulingPolicy | None = None):
         if n_slots < 1:
             raise ValueError("need at least one slot")
         self.n_slots = n_slots
+        self.policy = policy if policy is not None else FIFOPolicy()
         self._queue: deque = deque()
         self._slots: list = [None] * n_slots     # slot -> Request | None
         self._finished: list = []
+        self._shed: list = []
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request) -> None:
@@ -102,6 +113,11 @@ class SlotScheduler:
         return list(self._finished)
 
     @property
+    def shed_requests(self) -> list:
+        """Requests the policy dropped unserved (state SHED)."""
+        return list(self._shed)
+
+    @property
     def pending(self) -> bool:
         return bool(self._queue)
 
@@ -112,12 +128,15 @@ class SlotScheduler:
 
     # ------------------------------------------------------------ admission
     def admit(self, now: int, batch_sync: bool = False) -> list:
-        """Grant free slots to arrived requests; returns [(slot, request)].
-
-        FIFO: only the queue head is ever considered. ``batch_sync`` is the
-        static-batching policy (see module docstring).
+        """Grant free slots to arrived requests in the policy's admission
+        order; returns [(slot, request)]. ``batch_sync`` is the static-
+        batching reference policy (see module docstring; FIFO only).
         """
         if batch_sync:
+            if not isinstance(self.policy, FIFOPolicy):
+                raise ValueError(
+                    "batch_sync (static batching) is defined only for the "
+                    f"FIFO reference policy, not {self.policy.name!r}")
             if len(self.free_slots) < self.n_slots:
                 return []                     # a batch in flight: wait it out
             k = min(self.n_slots, len(self._queue))
@@ -125,8 +144,10 @@ class SlotScheduler:
                 return []                     # wait for the full batch
         out = []
         free = deque(self.free_slots)
-        while free and self._queue and self._queue[0].arrival <= now:
-            req = self._queue.popleft()
+        for req in self.policy.admission_order(list(self._queue), now):
+            if not free:
+                break
+            self._queue.remove(req)
             slot = free.popleft()
             assert self._slots[slot] is None, "slot double-booked"
             assert req.slot is None, f"request {req.rid} already has a slot"
@@ -138,6 +159,48 @@ class SlotScheduler:
             self._slots[slot] = req
             out.append((slot, req))
         return out
+
+    # ------------------------------------------------------------ SLO hooks
+    def shed(self, now: int) -> list:
+        """Drop the queued requests the policy declines to serve (hopeless
+        deadlines, overload). Shed requests never held a slot; they leave
+        the queue in SHED state and are reported separately from finished
+        work. Returns the shed requests."""
+        victims = self.policy.sheds(list(self._queue), now)
+        for req in victims:
+            self._queue.remove(req)
+            req.state = RequestState.SHED
+            req.t_done = now
+            req.slot = None
+            self._shed.append(req)
+        return victims
+
+    def plan_preemptions(self, now: int) -> list:
+        """Slots the policy wants evicted for arrived waiting work that the
+        free slots cannot cover. Pure planning — the ENGINE must perform
+        the eviction (it owns the device-side slot reset) and then call
+        :meth:`preempt` per victim."""
+        order = self.policy.admission_order(list(self._queue), now)
+        waiting = order[len(self.free_slots):]
+        if not waiting:
+            return []
+        return self.policy.preemptions(waiting, self.active, now)
+
+    def preempt(self, slot: int, now: int) -> Request:
+        """Evict the slot's request back into the queue — journal and
+        first-token timestamp intact, so its eventual re-admission resumes
+        the stream bit-identically through the exact-resume machinery
+        (same contract as failover's ``requeue_front``, which this reuses:
+        the requeue position is deterministic — arrival order for FIFO,
+        and irrelevant under SLOPolicy, whose admission_order re-sorts the
+        queue every tick). Returns the evicted request."""
+        req = self._slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is already free")
+        self._slots[slot] = None
+        req.preemptions += 1
+        self.requeue_front([req])
+        return req
 
     # ------------------------------------------------------------ release
     def release(self, slot: int, now: int) -> Request:

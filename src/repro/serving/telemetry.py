@@ -51,15 +51,44 @@ from repro.core.collectives import CollectiveConfig, all_reduce
 #   quarantines    — replicas quarantined this tick by the non-finite
 #                    decode-logits guard (poisoned work failed over, never
 #                    committed)
+#   preemptions    — in-flight requests evicted from their slot this tick
+#                    for higher-priority work (journal kept; the stream
+#                    later resumes bit-identically — docs/scheduling.md)
+#   shed_requests  — queued requests dropped unserved this tick by the
+#                    overload policy (hopeless deadlines / queue bound)
+#   deadline_misses — requests whose TTFT deadline was missed this tick:
+#                    counted once per request, either when its first token
+#                    lands past the deadline or when it is shed
 STATS_FIELDS = ("queue_depth", "active_slots", "new_tokens", "prefills",
                 "prefill_chunks", "sampled_tokens", "drafted_tokens",
                 "accepted_tokens", "failovers", "resumed_tokens",
-                "quarantines")
+                "quarantines", "preemptions", "shed_requests",
+                "deadline_misses")
 
 # b=1: latency-bound single-block pipeline; "auto": measured autotuner hit
 # if one exists for this (p, nbytes, dtype, fabric), else the cost-model
 # switch — multi-node meshes with a tuned 'hier' entry pick it up here.
 STATS_COLLECTIVE = CollectiveConfig(method="auto", num_blocks=1)
+
+
+def stats_vector(stats: dict) -> list:
+    """Order a per-tick ``{field: value}`` dict into the STATS_FIELDS row.
+
+    This is the anti-drift chokepoint: PRs 3–6 each grew the stats row by
+    hand as a positional list, which let the emitter and STATS_FIELDS skew
+    silently — and a skewed b=1 reduction payload sums the WRONG counters
+    fleet-wide without any shape error. The engine now builds its row by
+    name through this function, which refuses any mismatch, so a field
+    added to one side but not the other fails on the first tick rather
+    than in a dashboard weeks later.
+    """
+    extra = set(stats) - set(STATS_FIELDS)
+    missing = set(STATS_FIELDS) - set(stats)
+    if extra or missing:
+        raise ValueError(
+            "per-tick stats drifted from telemetry.STATS_FIELDS: "
+            f"missing={sorted(missing)} unexpected={sorted(extra)}")
+    return [float(stats[f]) for f in STATS_FIELDS]
 
 
 def make_stats_reducer(mesh, axis: str = "data",
@@ -121,6 +150,9 @@ class StepStats:
     failovers: float = 0.0
     resumed_tokens: float = 0.0
     quarantines: float = 0.0
+    preemptions: float = 0.0
+    shed_requests: float = 0.0
+    deadline_misses: float = 0.0
 
 
 class TelemetryLog:

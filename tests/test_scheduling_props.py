@@ -1,0 +1,226 @@
+"""Property-based scheduler invariants (host-only, no model).
+
+Random admit/preempt/release/shed/priority sequences against the
+SlotScheduler under BOTH policies must uphold, at every step:
+
+* no double-booking — a slot holds one request, a request holds one slot,
+  queued requests hold none;
+* policy-faithful admission — ``admit`` grants exactly the prefix of
+  ``policy.admission_order`` over the pre-admission queue (which is the
+  no-skip property: a ready higher-priority request is never passed over);
+* deterministic decisions — replaying the same seeded op sequence yields
+  the identical decision log (admissions, sheds, preemption plans,
+  requeue order);
+* no starvation — aging lifts a waiting low-priority request above a
+  steady stream of fresh interactive traffic in bounded ticks;
+* FIFO conservatism — the reference policy never sheds, never preempts.
+
+Driven through tests/_hyp.py: real hypothesis when installed, a
+deterministic boundary + pseudo-random fallback otherwise.
+"""
+
+import numpy as np
+
+from _hyp import given, settings, st
+from repro.serving import (FIFOPolicy, PriorityClass, Request, RequestState,
+                           SlotScheduler, SLOParams, SLOPolicy)
+
+PRIORITIES = tuple(PriorityClass)
+
+
+def _mk_requests(rng, n):
+    reqs = []
+    for i in range(n):
+        prio = PRIORITIES[int(rng.integers(len(PRIORITIES)))]
+        deadline = (int(rng.integers(1, 20))
+                    if rng.integers(3) == 0 else None)
+        reqs.append(Request(
+            rid=i, prompt=(1, 2), max_new_tokens=4,
+            arrival=int(rng.integers(0, 12)),
+            slo=SLOParams(priority=prio, deadline_ticks=deadline)))
+    return reqs
+
+
+def _check_booking(sched, all_reqs):
+    """The no-double-booking invariant, checked after every op."""
+    active = sched.active
+    assert len({id(r) for r in active.values()}) == len(active)
+    for slot, req in active.items():
+        assert req.slot == slot
+        assert req.state is RequestState.PREFILLING
+    queued_or_done = [r for r in all_reqs if r not in active.values()]
+    for r in queued_or_done:
+        assert r.slot is None, f"non-active request {r.rid} holds a slot"
+    for r in sched.shed_requests:
+        assert r.state is RequestState.SHED and r.slot is None
+
+
+def _run_ops(seed, n_reqs, n_slots, policy, n_ops=40):
+    """Execute a seeded op sequence; returns the decision log."""
+    rng = np.random.default_rng(seed)
+    sched = SlotScheduler(n_slots, policy=policy)
+    reqs = _mk_requests(rng, n_reqs)
+    submitted = []
+    log = []
+    now = 0
+    for _ in range(n_ops):
+        op = int(rng.integers(5))
+        if op == 0 and len(submitted) < len(reqs):
+            req = reqs[len(submitted)]
+            # arrivals must be in the submitter's past-or-present — model
+            # the real engine, where submit happens at or before arrival
+            req.arrival = max(req.arrival, now)
+            sched.submit(req)
+            submitted.append(req)
+            log.append(("submit", req.rid))
+        elif op == 1:
+            before = list(sched._queue)
+            expected = [r.rid for r in
+                        policy.admission_order(before, now)]
+            n_free = len(sched.free_slots)
+            granted = sched.admit(now)
+            assert [r.rid for _, r in granted] == expected[:n_free], \
+                "admission must be exactly the policy-order prefix"
+            log.append(("admit", tuple(r.rid for _, r in granted)))
+        elif op == 2:
+            victims = sched.shed(now)
+            if isinstance(policy, FIFOPolicy):
+                assert victims == [], "FIFO never sheds"
+            log.append(("shed", tuple(r.rid for r in victims)))
+        elif op == 3:
+            plan = sched.plan_preemptions(now)
+            if isinstance(policy, FIFOPolicy):
+                assert plan == [], "FIFO never preempts"
+            evicted = tuple(sched.preempt(s, now).rid for s in plan)
+            # the evicted requests must be back in the queue, re-sorted
+            # deterministically (arrival, rid) at the front
+            for rid in evicted:
+                assert any(r.rid == rid for r in sched._queue)
+            log.append(("preempt", tuple(plan), evicted))
+        elif op == 4 and sched.active:
+            slot = sorted(sched.active)[int(rng.integers(
+                len(sched.active)))]
+            req = sched.release(slot, now)
+            log.append(("release", slot, req.rid))
+        _check_booking(sched, submitted)
+        now += int(rng.integers(3))
+    return log
+
+
+@settings(max_examples=24, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), n_slots=st.integers(1, 4),
+       n_reqs=st.integers(1, 12), slo=st.booleans())
+def test_random_op_sequences_uphold_invariants(seed, n_slots, n_reqs, slo):
+    policy = SLOPolicy(age_ticks=4, max_queue=6) if slo else FIFOPolicy()
+    _run_ops(seed, n_reqs, n_slots, policy)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), slo=st.booleans())
+def test_decision_log_is_deterministic(seed, slo):
+    """Same seed, same policy -> byte-identical decision history. This is
+    what makes preemption requeue order (and everything else the policy
+    decides) reproducible run-to-run."""
+    mk = (lambda: SLOPolicy(age_ticks=4, max_queue=6)) if slo \
+        else FIFOPolicy
+    a = _run_ops(seed, 10, 3, mk())
+    b = _run_ops(seed, 10, 3, mk())
+    assert a == b
+
+
+@settings(max_examples=16, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), age=st.integers(1, 8))
+def test_admission_order_never_skips_higher_priority(seed, age):
+    """Direct form of the no-skip property: the policy's order is sorted
+    by (aged priority, arrival, rid), so no arrived request precedes a
+    strictly more urgent one."""
+    rng = np.random.default_rng(seed)
+    pol = SLOPolicy(age_ticks=age)
+    reqs = _mk_requests(rng, 10)
+    now = int(rng.integers(0, 30))
+    order = pol.admission_order(reqs, now)
+    keys = [pol._key(r, now) for r in order]
+    assert keys == sorted(keys)
+    assert all(r.arrival <= now for r in order)
+
+
+def test_aging_prevents_starvation_under_interactive_flood():
+    """A best-effort request facing a fresh interactive arrival every tick
+    is admitted within priority_distance * age_ticks + O(1) ticks: aging
+    walks its effective class up to INTERACTIVE, where the (arrival, rid)
+    tie-break favors it over every newer rival."""
+    age = 3
+    sched = SlotScheduler(1, policy=SLOPolicy(age_ticks=age, preempt=False))
+    starved = Request(rid=1000, prompt=(1,), max_new_tokens=2, arrival=0,
+                      slo=SLOParams(priority=PriorityClass.BEST_EFFORT))
+    sched.submit(starved)
+    admitted_at = None
+    for now in range(0, 40):
+        rival = Request(rid=now, prompt=(1,), max_new_tokens=2, arrival=now,
+                        slo=SLOParams(priority=PriorityClass.INTERACTIVE))
+        sched.submit(rival)
+        granted = sched.admit(now)
+        if any(r.rid == 1000 for _, r in granted):
+            admitted_at = now
+            break
+        # 1-tick service: free the slot so the next tick admits again
+        for slot in list(sched.active):
+            sched.release(slot, now)
+    bound = int(PriorityClass.BEST_EFFORT) * age + 1
+    assert admitted_at is not None and admitted_at <= bound, \
+        f"best-effort starved: admitted_at={admitted_at}, bound={bound}"
+
+
+def test_fifo_blocks_on_unarrived_head_property_form():
+    """FIFO's defining quirk survives the policy refactor: an unarrived
+    head request gates everything behind it (no skip-ahead)."""
+    pol = FIFOPolicy()
+    late = Request(rid=0, prompt=(1,), max_new_tokens=2, arrival=10)
+    early = Request(rid=1, prompt=(1,), max_new_tokens=2, arrival=0)
+    assert pol.admission_order([late, early], now=5) == []
+    assert [r.rid for r in pol.admission_order([late, early], now=10)] \
+        == [0, 1]
+
+
+def test_preemption_is_strict_and_thrash_free():
+    """A victim must be STRICTLY worse than the contender, so an evicted
+    request can never immediately evict its evictor back — and equal
+    classes never preempt each other at all."""
+    pol = SLOPolicy(age_ticks=0)
+    occ = Request(rid=0, prompt=(1,), max_new_tokens=2, arrival=0,
+                  slo=SLOParams(priority=PriorityClass.BATCH))
+    same = Request(rid=1, prompt=(1,), max_new_tokens=2, arrival=5,
+                   slo=SLOParams(priority=PriorityClass.BATCH))
+    better = Request(rid=2, prompt=(1,), max_new_tokens=2, arrival=5,
+                     slo=SLOParams(priority=PriorityClass.INTERACTIVE))
+    assert pol.preemptions([same], {0: occ}, now=5) == []
+    assert pol.preemptions([better], {0: occ}, now=5) == [0]
+    # non-preemptible occupants are immune regardless of class
+    pinned = Request(rid=3, prompt=(1,), max_new_tokens=2, arrival=0,
+                     slo=SLOParams(priority=PriorityClass.BEST_EFFORT,
+                                   preemptible=False))
+    assert pol.preemptions([better], {0: pinned}, now=5) == []
+
+
+def test_shed_only_hopeless_and_overflow():
+    """Deadline shedding drops only BEST_EFFORT requests already past
+    their TTFT deadline; max_queue sheds the worst-priority arrived tail."""
+    pol = SLOPolicy(age_ticks=0, max_queue=2)
+    hopeless = Request(rid=0, prompt=(1,), max_new_tokens=2, arrival=0,
+                       slo=SLOParams(priority=PriorityClass.BEST_EFFORT,
+                                     deadline_ticks=3))
+    late_batch = Request(rid=1, prompt=(1,), max_new_tokens=2, arrival=0,
+                         slo=SLOParams(priority=PriorityClass.BATCH,
+                                       deadline_ticks=3))
+    fine = Request(rid=2, prompt=(1,), max_new_tokens=2, arrival=0,
+                   slo=SLOParams(priority=PriorityClass.INTERACTIVE))
+    shed = pol.sheds([hopeless, late_batch, fine], now=10)
+    # batch-class deadline misses are NOT shed (they still get served and
+    # counted as misses); hopeless best-effort is dropped
+    assert [r.rid for r in shed] == [0]
+    # overload: worst-priority arrived tail beyond max_queue
+    extra = [Request(rid=10 + i, prompt=(1,), max_new_tokens=2, arrival=0,
+                     slo=SLOParams(priority=PriorityClass.BEST_EFFORT))
+             for i in range(3)]
+    shed = pol.sheds([late_batch, fine] + extra, now=0)
+    assert len(shed) == 3 and all(r.rid >= 10 for r in shed)
