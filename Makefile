@@ -3,8 +3,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test test-fast test-chaos test-serving docs-check docs-links \
-	bench bench-collectives bench-serving
+.PHONY: verify test test-fast test-chaos test-serving test-tp docs-check \
+	docs-links bench bench-collectives bench-serving
 
 verify:
 	$(PY) -m pytest -x -q
@@ -26,6 +26,14 @@ test-serving:
 	$(PY) -m pytest tests/test_serving.py tests/test_speculative.py \
 		tests/test_slo.py tests/test_scheduling_props.py \
 		tests/test_chaos.py -q
+
+# tensor-parallel suite: the fast TP unit/property tests plus the
+# slow-marked 8-virtual-device stream-identity matrix (subprocesses set
+# the XLA flag themselves; exporting it here also covers any future
+# in-process multi-device TP test)
+test-tp:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		$(PY) -m pytest tests/test_tensor_parallel.py -q
 
 docs-check:
 	$(PY) tools/check_docs.py

@@ -77,6 +77,14 @@ class ParallelConfig:
     # an XLA SPMD gather-partitioner check failure that certain dim
     # combinations trip under subgrouped manual axes — see DESIGN.md).
     pod_sync: str = "dptree"
+    # tensor parallelism (serving decode path): shard attention heads / FFN
+    # columns across a 'tp' mesh axis; every decode tick then ends in a tiny
+    # per-token allreduce — the paper's latency-bound regime. method='auto'
+    # lets the autotuner/cost model pick dptree vs ring per message size
+    # (docs/tensor_parallel.md); psum fallback preserved in partial-manual
+    # regions per repro/compat.py.
+    tp_shards: int = 1
+    tp_collective: CollectiveConfig = CollectiveConfig(method="auto")
 
 
 def get_arch(name: str):

@@ -15,10 +15,13 @@ the loop empirically:
 * :func:`lookup` is consulted by ``CollectiveConfig(method="auto")`` at trace
   time: a cache hit overrides the analytic choice with the measured one.
 
-Cache entries are keyed by ``(p, nbytes, dtype, topology)`` where ``topology``
-is the :class:`~repro.core.cost_model.CommModel` name (or any caller-chosen
-topology tag, e.g. ``"cpu8"`` for the virtual-device bench), so results from
-different fabrics never cross-contaminate. A ``hier`` winner additionally
+Cache entries are keyed by ``(p, nbytes, dtype, topology)`` — where
+``topology`` is the :class:`~repro.core.cost_model.CommModel` name (or any
+caller-chosen topology tag, e.g. ``"cpu8"`` for the virtual-device bench) —
+plus, when tagged, the mesh ``axis`` the result was measured on (``'tp'``
+per-token reductions vs ``'data'`` gradient buckets vs the replica-stats
+tree), so results from different fabrics or axis roles never
+cross-contaminate. A ``hier`` winner additionally
 records the exact hierarchy level spec it was timed with and whether the
 slow-stage bf16 wire was on (``compressed``); ``auto`` replays only that
 exact configuration — and the compressed variant only for configs that set
@@ -77,10 +80,20 @@ class TuneResult:
     # whether the winner was timed with the bf16 inter-group wire; replayed
     # only when the consuming config also opts into the lossy compression.
     compressed: bool = False
+    # mesh-axis tag the winner was measured on ('data' gradient buckets,
+    # 'tp' per-token tensor-parallel reductions, 'replica' stats trees, ...).
+    # Axis-tagged entries are only replayed for lookups probing the SAME
+    # axis: a decode-sized TP tuning must never replay onto a gradient-
+    # bucket config that happens to share (p, nbytes, dtype, topology).
+    # None keys the legacy axis-less entry, which any lookup may fall back
+    # to — existing cache files stay valid.
+    axis: str | None = None
 
 
-def _key(p: int, nbytes: int, dtype: str, topology: str) -> str:
-    return f"p={int(p)}/nbytes={int(nbytes)}/dtype={dtype}/topo={topology}"
+def _key(p: int, nbytes: int, dtype: str, topology: str,
+         axis: str | None = None) -> str:
+    base = f"p={int(p)}/nbytes={int(nbytes)}/dtype={dtype}/topo={topology}"
+    return f"{base}/axis={axis}" if axis else base
 
 
 # Explicit path override (the CLI `--autotune-cache` flag); takes precedence
@@ -163,10 +176,17 @@ class AutotuneCache:
         if not self._loaded:
             self.load()
 
-    def get(self, p: int, nbytes: int, dtype: str,
-            topology: str) -> TuneResult | None:
+    def get(self, p: int, nbytes: int, dtype: str, topology: str,
+            axis: str | None = None) -> TuneResult | None:
         self._ensure()
-        e = self._entries.get(_key(p, nbytes, dtype, topology))
+        # axis-tagged entries take precedence for their own axis; every
+        # lookup may fall back to the legacy axis-less key (old cache files,
+        # axis-agnostic tunings), but never to a DIFFERENT axis's entry.
+        e = None
+        if axis:
+            e = self._entries.get(_key(p, nbytes, dtype, topology, axis))
+        if not e:
+            e = self._entries.get(_key(p, nbytes, dtype, topology))
         if not e:
             return None
         try:
@@ -175,9 +195,11 @@ class AutotuneCache:
                 # JSON round-trips level tuples as lists; ints stay ints.
                 gs = tuple(int(s) for s in gs) if isinstance(gs, (list, tuple)) \
                     else int(gs)
+            ax = e.get("axis")
             res = TuneResult(str(e["algorithm"]), int(e["num_blocks"]),
                              float(e.get("time_s", 0.0)), gs,
-                             bool(e.get("compressed", False)))
+                             bool(e.get("compressed", False)),
+                             str(ax) if ax else None)
         except (KeyError, TypeError, ValueError):
             return None
         # semantic validation: corrupted entries are misses, not winners
@@ -191,12 +213,13 @@ class AutotuneCache:
         self._ensure()
         with self._lock:
             gs = result.group_size
-            self._entries[_key(p, nbytes, dtype, topology)] = {
+            self._entries[_key(p, nbytes, dtype, topology, result.axis)] = {
                 "algorithm": result.algorithm,
                 "num_blocks": int(result.num_blocks),
                 "time_s": float(result.time_s),
                 "group_size": list(gs) if isinstance(gs, tuple) else gs,
                 "compressed": bool(result.compressed),
+                "axis": result.axis,
             }
 
     def __len__(self) -> int:
@@ -269,7 +292,8 @@ def tune(runner: Callable[[str, int], float], p: int, nbytes: int,
          group_size=None,
          compress_inter_group: bool = False,
          cache: AutotuneCache | None = None,
-         save: bool = True) -> TuneResult:
+         save: bool = True,
+         axis: str | None = None) -> TuneResult:
     """Measure candidates with ``runner(algorithm, num_blocks) -> seconds``.
 
     ``algorithm`` as handed to ``runner`` may carry the ``'+bf16'`` suffix
@@ -279,7 +303,9 @@ def tune(runner: Callable[[str, int], float], p: int, nbytes: int,
     ``save``). ``runner`` failures (e.g. an algorithm unavailable on this
     backend) are skipped, not fatal — unless every candidate fails.
     """
-    cache = cache or get_cache()
+    # `is None`, not truthiness: an empty caller-supplied cache has len 0
+    # and must still receive the result (not the process-wide cache).
+    cache = get_cache() if cache is None else cache
     # Resolve the shape hier actually runs with BEFORE measuring, so the
     # recorded TuneResult names the exact configuration that was timed.
     from repro.core.topology import as_levels, default_group_size
@@ -299,7 +325,8 @@ def tune(runner: Callable[[str, int], float], p: int, nbytes: int,
             base = algo.removesuffix(COMPRESSED_SUFFIX)
             best = TuneResult(base, b, t,
                               hier_lv if base == "hier" else None,
-                              compressed=algo.endswith(COMPRESSED_SUFFIX))
+                              compressed=algo.endswith(COMPRESSED_SUFFIX),
+                              axis=axis)
     if best is None:
         raise RuntimeError(f"autotune: every candidate failed: {errors}")
     cache.put(p, nbytes, dtype, topology, best)
@@ -308,12 +335,16 @@ def tune(runner: Callable[[str, int], float], p: int, nbytes: int,
     return best
 
 
-def lookup(p: int, nbytes: int, dtype: str,
-           topology: str) -> TuneResult | None:
-    """Cache probe used by the ``auto`` method at trace time. Never raises."""
+def lookup(p: int, nbytes: int, dtype: str, topology: str,
+           axis: str | None = None) -> TuneResult | None:
+    """Cache probe used by the ``auto`` method at trace time. Never raises.
+
+    ``axis`` scopes the probe to that mesh axis's tunings (falling back to
+    legacy axis-less entries only) — see :class:`TuneResult`.
+    """
     if os.environ.get("REPRO_AUTOTUNE", "1") in ("0", "off", "false"):
         return None
     try:
-        return get_cache().get(p, nbytes, dtype, topology)
+        return get_cache().get(p, nbytes, dtype, topology, axis)
     except Exception:
         return None

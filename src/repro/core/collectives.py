@@ -138,21 +138,24 @@ def _degrade_for_op(algo: str, op, method: str) -> str:
 
 
 def _pick(method: str, p: int, nbytes: int, config: "CollectiveConfig",
-          dtype) -> tuple:
+          dtype, axis_name: str | None = None) -> tuple:
     """(algorithm, measured_num_blocks | None, hier_spec | None, compress).
 
     ``hier_spec`` is the hierarchy level spec (int or tuple) the hier path
     should execute with; ``compress`` is whether the slow inter-group stage
-    rides the bf16 wire.
+    rides the bf16 wire. ``axis_name`` scopes the autotune probe to that
+    mesh axis's measurements (TP reductions vs gradient buckets vs stats
+    trees never replay onto each other — legacy axis-less entries still
+    match any axis).
     """
     if method != "auto":
         return method, None, config.hier_spec, config.compress_inter_group
     # Empirical closed loop first: a measured (algorithm, blocks) for this
-    # exact (p, bytes, dtype, fabric) beats any model prediction — but only
-    # if the recorded setting is actually runnable here ('auto' must degrade,
-    # never raise, on a stale or foreign cache entry).
+    # exact (p, bytes, dtype, fabric, axis) beats any model prediction — but
+    # only if the recorded setting is actually runnable here ('auto' must
+    # degrade, never raise, on a stale or foreign cache entry).
     hit = autotune.lookup(p, int(max(nbytes, 1)), str(dtype),
-                          config.comm_model.name)
+                          config.comm_model.name, axis=axis_name)
     if hit is not None and hit.algorithm in _RUNNABLE:
         if hit.algorithm != "hier":
             return hit.algorithm, max(1, int(hit.num_blocks)), None, False
@@ -239,7 +242,7 @@ def all_reduce(x: jax.Array, axis_name: str, p: int,
         flat = flat.astype(jnp.bfloat16)
     nbytes = flat.size * flat.dtype.itemsize
     algo, nb_measured, hier_spec, hier_compress = _pick(
-        config.method, p, nbytes, config, flat.dtype)
+        config.method, p, nbytes, config, flat.dtype, axis_name)
     new_algo = _degrade_for_op(algo, op, config.method)
     if new_algo != algo:
         algo, nb_measured = new_algo, None

@@ -34,6 +34,7 @@ __all__ = [
     "redbcast_time",
     "ring_time",
     "hier_time",
+    "tp_time",
     "COMPRESS_FACTOR",
     "optimal_blocks",
     "best_algorithm",
@@ -129,11 +130,31 @@ def ring_time(p: int, m_bytes: float, model: CommModel,
 COMPRESS_FACTOR = {None: 1.0, "bf16": 0.5}
 
 
+def tp_time(tp: int, m_bytes: float, model: CommModel) -> float:
+    """Per-token tensor-parallel allreduce stage: the better of the
+    doubly-pipelined dual-root tree (at its own block optimum) and the
+    bidirectional ring, over ``tp`` ranks of the fastest fabric.
+
+    Decode activations are tiny (``batch * d_model * itemsize`` bytes per
+    sublayer reduction), i.e. the paper's latency-bound regime: the tree's
+    ``O(log tp)`` startup beats the ring's ``O(tp)`` there, while at
+    gradient-bucket sizes the ring's bandwidth term wins — exactly the
+    crossover :func:`best_algorithm` ranks.
+    """
+    if tp <= 1:
+        return 0.0
+    b = optimal_blocks(tp, m_bytes, model, "dptree")
+    return min(dptree_time(tp, m_bytes, b, model),
+               ring_time(tp, m_bytes, model))
+
+
 def hier_time(p: int, m_bytes: float, b: int, model: CommModel,
               group_size=4,
               intra_model: CommModel | None = None, *,
               level_models=None,
-              compression: str | None = None) -> float:
+              compression: str | None = None,
+              tp: int = 1, tp_bytes: float | None = None,
+              tp_model: CommModel | None = None) -> float:
     """Hierarchical (2..N-level) allreduce on a heterogeneous fabric.
 
     ``model`` prices the slow inter-group links (e.g. ``TPU_V5E_INTERPOD``
@@ -155,9 +176,20 @@ def hier_time(p: int, m_bytes: float, b: int, model: CommModel,
 
     Degenerate specs keep their closed forms: an infeasible spec prices as
     the flat dptree, a single all-covering group as the pure intra ring.
+
+    ``tp > 1`` adds a tensor-parallel stage (:func:`tp_time`) on the
+    innermost/fastest fabric: one per-token allreduce of ``tp_bytes``
+    (default ``m_bytes``) across the ``tp`` model shards of each replica.
+    The TP stage is additive and orthogonal to the replica hierarchy — it
+    applies even at ``p == 1`` (a single tensor-parallel replica).
     """
+    extra = 0.0
+    if tp > 1:
+        fast = tp_model or (tuple(level_models)[0] if level_models
+                            else (intra_model or TPU_V5E))
+        extra = tp_time(tp, m_bytes if tp_bytes is None else tp_bytes, fast)
     if p == 1:
-        return 0.0
+        return extra
     from repro.core.topology import as_levels
     try:
         levels = as_levels(group_size)
@@ -165,14 +197,14 @@ def hier_time(p: int, m_bytes: float, b: int, model: CommModel,
         levels = None
     S = int(np.prod(levels)) if levels else 1
     if not levels or S <= 1 or p % S:
-        return dptree_time(p, m_bytes, b, model)
+        return extra + dptree_time(p, m_bytes, b, model)
     if level_models is None:
         level_models = (intra_model or TPU_V5E,) * len(levels)
     if len(level_models) != len(levels):
         raise ValueError(f"need one CommModel per level: "
                          f"{len(level_models)} models for {levels}")
     g = p // S
-    t, cur = 0.0, m_bytes
+    t, cur = extra, m_bytes
     for s, lm in zip(levels, level_models):
         half = cur / s / 2.0
         t += 2 * (s - 1) * (lm.exchange(half) + lm.gamma * half)

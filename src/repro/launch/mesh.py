@@ -34,6 +34,27 @@ def make_mesh(shape, axes):
     return compat.make_mesh(shape, axes)
 
 
+def make_tp_mesh(tp: int):
+    """Tensor-parallel serving mesh: ``tp`` devices on a single ``'tp'`` axis.
+
+    Deliberately one-axis: the TP step builders wrap the model body in a
+    shard_map manual over EVERY mesh axis, and on the container's old jax a
+    fully-manual region is the one place ``ppermute`` (hence the dptree /
+    sptree / ring schedule collectives) still lowers — any auto axis in the
+    mesh would force ``collectives.all_reduce`` down its psum fallback (see
+    ``repro/compat.py``). Replica parallelism composes at the process level
+    (``serving.fleet``), not as a second axis here.
+    """
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    devs = jax.devices()
+    if len(devs) < tp:
+        raise RuntimeError(f"tp={tp} needs {tp} devices, have {len(devs)} "
+                           "(set XLA_FLAGS=--xla_force_host_platform_device_count)")
+    from repro import compat
+    return compat.make_mesh((tp,), ("tp",), devices=devs[:tp])
+
+
 def make_local_mesh():
     """Whatever this process has (1 CPU device in the container)."""
     n = len(jax.devices())

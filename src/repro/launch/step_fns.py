@@ -106,6 +106,60 @@ def _named(mesh, spec_tree):
                         is_leaf=lambda v: isinstance(v, P))
 
 
+# --------------------------------------------------------------------------
+# tensor parallelism (serving decode/prefill/verify)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _TPSetup:
+    tp: int
+    axis: str
+    scfg: Any          # per-rank shard config (heads/FFN divided by tp)
+    pspecs: Any        # tp_param_specs
+    cspecs: Any        # tp_cache_specs
+    collective: CollectiveConfig
+
+
+def _tp_setup(cfg, pcfg: ParallelConfig, mesh) -> _TPSetup | None:
+    """Resolve the tensor-parallel regime for the serving step builders.
+
+    Returns None when ``pcfg.tp_shards <= 1`` (the builders then compile
+    their usual GSPMD-auto bodies). Otherwise the model body is traced
+    inside a shard_map manual over EVERY mesh axis: each rank sees the
+    parameter/cache shards named by :func:`repro.models.transformer.
+    tp_param_specs` / ``tp_cache_specs`` and runs the unchanged model code
+    under the per-rank :func:`~repro.models.transformer.tp_shard_config`,
+    with the per-token partial-sum allreduce supplied by ``L.tp_ctx``. The
+    mesh must be fully covered (use :func:`repro.launch.mesh.make_tp_mesh`)
+    — a leftover auto axis would push ``collectives.all_reduce`` down the
+    old-jax psum fallback instead of the paper's tree (repro/compat.py).
+    """
+    tp = int(getattr(pcfg, "tp_shards", 1) or 1)
+    if tp <= 1:
+        return None
+    if "tp" not in mesh.axis_names:
+        raise ValueError(
+            f"tp_shards={tp} needs a 'tp' mesh axis, mesh has "
+            f"{mesh.axis_names}; build one with launch.mesh.make_tp_mesh")
+    if mesh.shape["tp"] != tp:
+        raise ValueError(f"tp_shards={tp} but the mesh 'tp' axis has "
+                         f"{mesh.shape['tp']} devices")
+    tf.validate_tp(cfg, tp)
+    return _TPSetup(tp=tp, axis="tp", scfg=tf.tp_shard_config(cfg, tp),
+                    pspecs=tf.tp_param_specs(cfg, "tp"),
+                    cspecs=tf.tp_cache_specs(cfg, "tp"),
+                    collective=pcfg.tp_collective)
+
+
+def _tp_model_ctx(tps: _TPSetup | None, mesh):
+    """The tracing context for a serving model body: the TP reduction hook
+    when tensor parallelism is on, else the mesh for ``maybe_shard``."""
+    from repro.models import layers as L
+    if tps is not None:
+        return L.tp_ctx(tps.axis, tps.tp, tps.collective)
+    return L.mesh_ctx(mesh)
+
+
 def _reduce_metrics(vec, axes, sizes, collective: CollectiveConfig):
     ptot = 1
     cfg1 = CollectiveConfig(method="dptree", num_blocks=1,
@@ -262,28 +316,34 @@ def make_prefill_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
       repro.serving.sampling). One compilation per (bucket Tc, resume)
       pair; ``slot`` is traced, so slot churn never re-jits.
     """
-    pspecs = (fsdp_pspecs(cfg, mesh) if pcfg.dp_mode == "fsdp"
+    tps = _tp_setup(cfg, pcfg, mesh)
+    pspecs = (tps.pspecs if tps is not None
+              else fsdp_pspecs(cfg, mesh) if pcfg.dp_mode == "fsdp"
               else model_pspecs(cfg, mesh))
+    mcfg = tps.scfg if tps is not None else cfg
     dp = _dp_axes(mesh)
 
     if into_slots:
         from repro.serving.sampling import sample_tokens
-        cspecs = cache_pspecs(cfg, mesh, suite.global_batch, suite.seq_len,
-                              per_slot=True, ring_slack=ring_slack)
+        cspecs = (tps.cspecs if tps is not None
+                  else cache_pspecs(cfg, mesh, suite.global_batch,
+                                    suite.seq_len, per_slot=True,
+                                    ring_slack=ring_slack))
 
         def _prefill_fwd(params, tokens, caches, slot, length, resume):
-            from repro.models.layers import mesh_ctx
-            with mesh_ctx(mesh):
+            with _tp_model_ctx(tps, mesh):
                 if resume:
                     row_in = jax.tree.map(
                         lambda full: jax.lax.dynamic_slice_in_dim(
                             full, slot, 1, axis=1), caches)
                 else:
-                    row_in = tf.init_cache(cfg, 1, suite.seq_len,
+                    # under TP this allocates the RANK-LOCAL fresh row
+                    # (mcfg's KV heads are already divided by tp)
+                    row_in = tf.init_cache(mcfg, 1, suite.seq_len,
                                            per_slot=True,
                                            ring_slack=ring_slack)
                 logits, row = tf.prefill_step(
-                    params, cfg, {"tokens": tokens}, row_in,
+                    params, mcfg, {"tokens": tokens}, row_in,
                     length.reshape(1), jnp.ones((1,), bool), resume=resume)
 
             def ins(full, r):
@@ -315,17 +375,32 @@ def make_prefill_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
         # draft-model drafter snapshots its caches before proposing and
         # restores them on rejection, which donation would invalidate.
         dn = (2,) if donate else ()
+
+        def _mk(body, n_args):
+            # TP: the whole cache-writing prefill (row slice/init, the
+            # sharded-model forward, the splice, the first-token pick) runs
+            # inside ONE fully-manual shard_map — params/caches enter as
+            # per-rank shards, tokens/slot/length/sampling replicate, and
+            # the emitted token + spliced caches come back out.
+            if tps is None:
+                return body
+            ins = (tps.pspecs, P(), tps.cspecs) + (P(),) * (n_args - 3)
+            return shard_map(body, mesh=mesh, in_specs=ins,
+                             out_specs=(P(), tps.cspecs),
+                             axis_names=set(mesh.axis_names),
+                             check_vma=False)
+
         jitted = {}
         for resume in (False, True):
             jitted[resume, False] = jax.jit(
-                functools.partial(greedy_body, resume=resume),
+                _mk(functools.partial(greedy_body, resume=resume), 5),
                 in_shardings=(_named(mesh, pspecs), None,
                               _named(mesh, cspecs), None, None),
                 out_shardings=(NamedSharding(mesh, P()),
                                _named(mesh, cspecs)),
                 donate_argnums=dn)
             jitted[resume, True] = jax.jit(
-                functools.partial(sampled_body, resume=resume),
+                _mk(functools.partial(sampled_body, resume=resume), 6),
                 in_shardings=(_named(mesh, pspecs), None,
                               _named(mesh, cspecs), None, None, None),
                 out_shardings=(NamedSharding(mesh, P()),
@@ -343,15 +418,19 @@ def make_prefill_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
         return step, {"params": pspecs, "cache": cspecs}
 
     def body(params, inputs):
-        from repro.models.layers import mesh_ctx
-        with mesh_ctx(mesh):
-            hs, _ = tf.forward(params, cfg, inputs)
-            return tf.unembed(params, cfg,
+        with _tp_model_ctx(tps, mesh):
+            hs, _ = tf.forward(params, mcfg, inputs)
+            return tf.unembed(params, mcfg,
                               hs[:, -1:]).astype(jnp.float32)[:, 0]
 
+    bspec = P() if tps is not None else P(dp)
+    if tps is not None:
+        body = shard_map(body, mesh=mesh, in_specs=(tps.pspecs, P()),
+                         out_specs=P(), axis_names=set(mesh.axis_names),
+                         check_vma=False)
     step = jax.jit(body, in_shardings=(_named(mesh, pspecs), None),
-                   out_shardings=NamedSharding(mesh, P(dp)))
-    return step, {"params": pspecs, "batch": P(dp)}
+                   out_shardings=NamedSharding(mesh, bspec))
+    return step, {"params": pspecs, "batch": bspec}
 
 
 def cache_pspecs(cfg, mesh, batch: int, max_len: int = 8,
@@ -408,13 +487,17 @@ def make_serve_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
     temperature 0 take the bit-exact greedy argmax
     (see repro.serving.sampling).
     """
-    pspecs = (fsdp_pspecs(cfg, mesh) if pcfg.dp_mode == "fsdp"
+    tps = _tp_setup(cfg, pcfg, mesh)
+    mcfg = tps.scfg if tps is not None else cfg
+    pspecs = (tps.pspecs if tps is not None
+              else fsdp_pspecs(cfg, mesh) if pcfg.dp_mode == "fsdp"
               else model_pspecs(cfg, mesh))
-    cspecs = cache_pspecs(cfg, mesh, suite.global_batch, suite.seq_len,
-                          per_slot=slots, ring_slack=ring_slack)
+    cspecs = (tps.cspecs if tps is not None
+              else cache_pspecs(cfg, mesh, suite.global_batch, suite.seq_len,
+                                per_slot=slots, ring_slack=ring_slack))
     dp = _dp_axes(mesh)
     n_dp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
-    shard_batch = dp and suite.global_batch % max(n_dp, 1) == 0 \
+    shard_batch = dp and not tps and suite.global_batch % max(n_dp, 1) == 0 \
         and suite.global_batch >= n_dp
     bspec = P(dp if len(dp) > 1 else (dp[0] if dp else None)) \
         if shard_batch else P(None)
@@ -433,22 +516,33 @@ def make_serve_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
             return jnp.where(ok, tokens, jnp.int32(-1))
 
         def greedy_body(params, inputs, caches, active):
-            from repro.models.layers import mesh_ctx
-            with mesh_ctx(mesh):
-                logits, new_caches = tf.decode_step(params, cfg, inputs,
+            with _tp_model_ctx(tps, mesh):
+                logits, new_caches = tf.decode_step(params, mcfg, inputs,
                                                     caches, active=active)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             return _guard(logits, tok), new_caches
 
         def sampled_body(params, inputs, caches, active, sampling):
-            from repro.models.layers import mesh_ctx
-            with mesh_ctx(mesh):
-                logits, new_caches = tf.decode_step(params, cfg, inputs,
+            with _tp_model_ctx(tps, mesh):
+                logits, new_caches = tf.decode_step(params, mcfg, inputs,
                                                     caches, active=active)
             tokens = sample_tokens(logits, sampling["key"], sampling["step"],
                                    sampling["temperature"],
                                    sampling["top_k"], sampling["top_p"])
             return _guard(logits, tokens), new_caches
+
+        def _mk(body, n_args):
+            # TP decode tick: one fully-manual shard_map per body — each
+            # rank runs its head/FFN shard of the stack, the per-token
+            # allreduce completes the logits, and argmax/sampling replicate
+            # per rank (bit-identical inputs -> bit-identical tokens).
+            if tps is None:
+                return body
+            ins = (tps.pspecs, P(), tps.cspecs) + (P(),) * (n_args - 3)
+            return shard_map(body, mesh=mesh, in_specs=ins,
+                             out_specs=(P(), tps.cspecs),
+                             axis_names=set(mesh.axis_names),
+                             check_vma=False)
 
         # all-greedy ticks (the default and the bench path) keep the hot
         # decode step at a plain argmax — the full-vocab sort/softmax of
@@ -458,12 +552,12 @@ def make_serve_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
         out_sh = (NamedSharding(mesh, bspec), _named(mesh, cspecs))
         dn = (2,) if donate else ()       # see make_prefill_step on donate
         greedy_step = jax.jit(
-            greedy_body,
+            _mk(greedy_body, 4),
             in_shardings=(_named(mesh, pspecs), None, _named(mesh, cspecs),
                           None),
             out_shardings=out_sh, donate_argnums=dn)
         sampled_step = jax.jit(
-            sampled_body,
+            _mk(sampled_body, 5),
             in_shardings=(_named(mesh, pspecs), None, _named(mesh, cspecs),
                           None, None),
             out_shardings=out_sh, donate_argnums=dn)
@@ -476,14 +570,18 @@ def make_serve_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
         return step, {"params": pspecs, "cache": cspecs, "batch": bspec}
 
     def body(params, inputs, caches):
-        from repro.models.layers import mesh_ctx
         inputs = dict(inputs)
         memory = inputs.pop("memory", None)
-        with mesh_ctx(mesh):
-            logits, new_caches = tf.decode_step(params, cfg, inputs, caches,
+        with _tp_model_ctx(tps, mesh):
+            logits, new_caches = tf.decode_step(params, mcfg, inputs, caches,
                                                 memory)
         return logits, new_caches
 
+    if tps is not None:
+        body = shard_map(body, mesh=mesh,
+                         in_specs=(tps.pspecs, P(), tps.cspecs),
+                         out_specs=(P(), tps.cspecs),
+                         axis_names=set(mesh.axis_names), check_vma=False)
     step = jax.jit(
         body,
         in_shardings=(_named(mesh, pspecs), None, _named(mesh, cspecs)),
@@ -531,20 +629,23 @@ def make_verify_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
     ``ring_slack >= draft_k`` — see ``init_cache``).
     """
     from repro.serving.sampling import sample_tokens_block
-    pspecs = (fsdp_pspecs(cfg, mesh) if pcfg.dp_mode == "fsdp"
+    tps = _tp_setup(cfg, pcfg, mesh)
+    mcfg = tps.scfg if tps is not None else cfg
+    pspecs = (tps.pspecs if tps is not None
+              else fsdp_pspecs(cfg, mesh) if pcfg.dp_mode == "fsdp"
               else model_pspecs(cfg, mesh))
-    cspecs = cache_pspecs(cfg, mesh, suite.global_batch, suite.seq_len,
-                          per_slot=True, ring_slack=ring_slack)
+    cspecs = (tps.cspecs if tps is not None
+              else cache_pspecs(cfg, mesh, suite.global_batch, suite.seq_len,
+                                per_slot=True, ring_slack=ring_slack))
     T = draft_k + 1
 
     def _verify(params, tokens, caches, active, n_draft, pred_fn):
-        from repro.models.layers import mesh_ctx
-        with mesh_ctx(mesh):
+        with _tp_model_ctx(tps, mesh):
             # columns past each row's own drafts are buffer padding: the
             # lengths= machinery keeps their ring writes suppressed (a pad
             # write can wrap over live K/V near ring capacity)
             lengths = jnp.clip(n_draft, 0, T - 1).astype(jnp.int32) + 1
-            logits, raw = tf.verify_forward(params, cfg, {"tokens": tokens},
+            logits, raw = tf.verify_forward(params, mcfg, {"tokens": tokens},
                                             caches, lengths=lengths)
             pred = pred_fn(logits)                             # (B, T) int32
             emitted, accept = tf.verify_accept(pred, tokens, n_draft)
@@ -572,17 +673,27 @@ def make_verify_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
             return _vguard(lg, pred)
         return _verify(params, tokens, caches, active, n_draft, pred_fn)
 
+    def _mk(body, n_args):
+        # TP verify: the whole one-pass score/accept/commit tick runs in a
+        # fully-manual shard_map (same shape as the decode tick's _mk)
+        if tps is None:
+            return body
+        ins = (tps.pspecs, P(), tps.cspecs) + (P(),) * (n_args - 3)
+        return shard_map(body, mesh=mesh, in_specs=ins,
+                         out_specs=(P(), P(), tps.cspecs),
+                         axis_names=set(mesh.axis_names), check_vma=False)
+
     # the same greedy/sampled split as make_serve_step: the default path
     # never compiles the sampler's full-vocab sorts
     out_sh = (NamedSharding(mesh, P()), NamedSharding(mesh, P()),
               _named(mesh, cspecs))
     greedy_step = jax.jit(
-        greedy_body,
+        _mk(greedy_body, 5),
         in_shardings=(_named(mesh, pspecs), None, _named(mesh, cspecs),
                       None, None),
         out_shardings=out_sh, donate_argnums=(2,))
     sampled_step = jax.jit(
-        sampled_body,
+        _mk(sampled_body, 6),
         in_shardings=(_named(mesh, pspecs), None, _named(mesh, cspecs),
                       None, None, None),
         out_shardings=out_sh, donate_argnums=(2,))

@@ -45,6 +45,65 @@ class mesh_ctx:
         _MESH_STACK.pop()
 
 
+_TP_STACK: list = []
+
+
+@dataclasses.dataclass(frozen=True)
+class TPInfo:
+    """Tensor-parallel execution context: the mesh axis the model's weight
+    shards live on, its size, and the CollectiveConfig the per-token partial
+    sum reduction runs with."""
+    axis: str
+    size: int
+    collective: Any
+
+
+class tp_ctx:
+    """Make a tensor-parallel axis visible to ``tp_all_reduce`` while a
+    sharded model body is being traced.
+
+    The TP step builders (:mod:`repro.launch.step_fns`) trace the model
+    inside a shard_map manual over ``axis`` with attention heads and FFN
+    columns split across it; every sharded sublayer's output projection then
+    produces a PARTIAL sum that ``tp_all_reduce`` completes. Outside this
+    context the model is unsharded and the reduction no-ops, so the same
+    model code serves tp=1 and tp>1."""
+
+    def __init__(self, axis: str, size: int, collective: Any):
+        self.info = TPInfo(axis, int(size), collective)
+
+    def __enter__(self):
+        _TP_STACK.append(self.info)
+        return self.info
+
+    def __exit__(self, *exc):
+        _TP_STACK.pop()
+
+
+def tp_info() -> TPInfo | None:
+    """The innermost active tensor-parallel context, or None."""
+    return _TP_STACK[-1] if _TP_STACK else None
+
+
+def tp_all_reduce(x: jax.Array) -> jax.Array:
+    """Complete a tensor-parallel partial sum across the TP axis.
+
+    No-op outside a :class:`tp_ctx`. Inside one, this is the per-token
+    allreduce at the end of every sharded sublayer — a tiny (B*T*d_model)
+    payload in the paper's latency-bound regime, routed through
+    :func:`repro.core.collectives.all_reduce` so ``method="auto"`` picks the
+    dual-root dptree (or a measured autotune winner) per message size. In
+    old-jax partial-manual regions ``all_reduce`` itself degrades to psum
+    (see ``repro.compat``); the payload is flattened because 1-D vectors
+    pipeline directly regardless of batch divisibility."""
+    info = tp_info()
+    if info is None or info.size <= 1:
+        return x
+    from repro.core.collectives import all_reduce  # local: avoids cycle
+    return all_reduce(x.reshape(-1), info.axis, info.size,
+                      info.collective).reshape(x.shape)
+
+
 def maybe_shard(x: jax.Array, spec: P | None) -> jax.Array:
     """Apply a sharding constraint if we are tracing under a mesh.
 

@@ -245,6 +245,124 @@ def param_pspecs(cfg: ModelConfig) -> Params:
 
 
 # --------------------------------------------------------------------------
+# tensor parallelism
+# --------------------------------------------------------------------------
+
+# Sublayer kinds whose weights shard across the TP axis (attention heads /
+# FFN columns); their output projections contract over the sharded dim and
+# meet in the per-token allreduce at the end of ``_apply_sub``. The
+# recurrent mixers (mamba/rwkv: cross-channel recurrences, token shift)
+# are replicated per rank — redundant compute, zero extra collectives —
+# which keeps every arch in the zoo runnable under TP.
+TP_SHARDED_KINDS = ("attn", "xattn", "mlp", "moe")
+
+
+def _tp_kinds(cfg: ModelConfig) -> set:
+    pats = cfg.pattern + (cfg.enc_pattern if cfg.enc_pattern else ())
+    return {s.kind for layer in pats for s in layer}
+
+
+def validate_tp(cfg: ModelConfig, tp: int) -> None:
+    """Reject infeasible tensor-parallel shardings with a clear error.
+
+    Heads (query AND kv) and FFN columns must divide evenly across the
+    ``tp`` ranks; there is no padding/uneven-shard path.
+    """
+    if tp <= 1:
+        return
+    kinds = _tp_kinds(cfg)
+    bad = []
+    if kinds & {"attn", "xattn"}:
+        if cfg.n_heads % tp:
+            bad.append(f"n_heads={cfg.n_heads}")
+        if cfg.n_kv_heads % tp:
+            bad.append(f"n_kv_heads={cfg.n_kv_heads}")
+    if kinds & {"mlp", "moe"} and cfg.d_ff % tp:
+        bad.append(f"d_ff={cfg.d_ff}")
+    if bad:
+        raise ValueError(
+            f"config {cfg.name!r} cannot be tensor-parallel sharded "
+            f"tp={tp} ways: " + ", ".join(bad) + f" not divisible by {tp} "
+            "(attention heads and FFN columns split evenly across the tp "
+            "mesh axis; pick tp dividing all of them)")
+
+
+def tp_shard_config(cfg: ModelConfig, tp: int) -> ModelConfig:
+    """The per-rank local view of ``cfg`` under ``tp``-way tensor
+    parallelism: each rank runs the unchanged model code with 1/tp of the
+    heads and FFN columns (head_dim pinned so shrinking n_heads does not
+    change it). Parameters/caches sliced per :func:`tp_param_specs` /
+    :func:`tp_cache_specs` match these shapes exactly."""
+    if tp <= 1:
+        return cfg
+    validate_tp(cfg, tp)
+    return dataclasses.replace(
+        cfg, n_heads=cfg.n_heads // tp, n_kv_heads=cfg.n_kv_heads // tp,
+        d_ff=cfg.d_ff // tp, head_dim=cfg.hdim)
+
+
+def tp_param_specs(cfg: ModelConfig, axis: str = "tp") -> Params:
+    """PartitionSpec pytree over the TP mesh axis, matching init_params.
+
+    Mirrors :func:`param_pspecs` (which marks exactly the shardable dims
+    with the GSPMD ``'model'`` name) but renames ``'model'`` -> ``axis``
+    for the :data:`TP_SHARDED_KINDS` and replicates everything else:
+    embed/unembed stay replicated (the token gather and the tied-unembed
+    contraction then need no extra collective on the decode path), as do
+    norms, routers, and the recurrent mixers."""
+    def rename(base: P) -> P:
+        return P(*(axis if n == "model" else None for n in base))
+
+    def sub_spec(s: SubSpec, params_like):
+        if s.kind not in TP_SHARDED_KINDS:
+            return jax.tree.map(lambda _: P(), params_like)
+        table = PARAM_SPECS_BY_KIND[s.kind]
+        def pick(path, leaf):
+            d = table
+            for q in path:
+                d = d.get(q.key, {}) if isinstance(d, dict) else {}
+            base = rename(d) if isinstance(d, P) else P()
+            return P(*((None,) + tuple(base)))   # leading period axis
+        return jax.tree_util.tree_map_with_path(pick, params_like)
+
+    zeros = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    specs: Params = {
+        "embed": P(),
+        "final_norm": jax.tree.map(lambda _: P(), zeros["final_norm"]),
+        "layers": [tuple(sub_spec(s, sp) for s, sp in zip(layer, stacked))
+                   for layer, stacked in zip(cfg.pattern, zeros["layers"])],
+    }
+    if "unembed" in zeros:
+        specs["unembed"] = P()
+    if "enc_layers" in zeros:
+        specs["enc_layers"] = [
+            tuple(sub_spec(s, sp) for s, sp in zip(layer, stacked))
+            for layer, stacked in zip(cfg.enc_pattern, zeros["enc_layers"])]
+        specs["enc_norm"] = jax.tree.map(lambda _: P(), zeros["enc_norm"])
+    return specs
+
+
+def tp_cache_specs(cfg: ModelConfig, axis: str = "tp"):
+    """PartitionSpec pytree matching :func:`init_cache`: attention K/V
+    rings (and their int8 scales) shard the KV-head dim — dim 3 of the
+    stacked ``(n_periods, batch, S, KV, dh)`` layout — across the TP axis;
+    position counters and recurrent-state caches are replicated (specs
+    shorter than rank mean 'remaining dims replicated')."""
+    kv = P(None, None, None, axis)
+    def sub(kind: str):
+        if kind == "attn":
+            d = {"k": kv, "v": kv, "pos": P()}
+            if cfg.kv_quant:
+                d.update(ks=kv, vs=kv)
+            return d
+        spec = (ssm.mamba_cache_spec(cfg.mamba_cfg(), 1, cfg.compute_dtype)
+                if kind == "mamba"
+                else ssm.rwkv_cache_spec(cfg.rwkv_cfg(), 1, cfg.compute_dtype))
+        return jax.tree.map(lambda _: P(), spec)
+    return tuple(sub(k) for k in cache_layer_kinds(cfg))
+
+
+# --------------------------------------------------------------------------
 # MoE implementations
 # --------------------------------------------------------------------------
 
@@ -403,6 +521,12 @@ def _apply_sub(sp: Params, s: SubSpec, cfg: ModelConfig, x, positions,
                                        collect_states=collect_states)
     else:
         raise ValueError(s.kind)
+    if s.kind in TP_SHARDED_KINDS:
+        # Under tensor parallelism these sublayers' output projections
+        # contract over a TP-sharded dim, so ``o`` is a partial sum; this is
+        # the per-token allreduce. No-op outside a ``L.tp_ctx``. The
+        # recurrent mixers (mamba/rwkv) are replicated per rank and skip it.
+        o = L.tp_all_reduce(o)
     return x + o, aux, new_cache
 
 

@@ -119,6 +119,20 @@ class ServingEngine:
                 "encoder stack (stub-embed / encoder-decoder frontends have "
                 "no token prompts to prefill)")
         self.cfg, self.pcfg, self.mesh = cfg, pcfg, mesh
+        # tensor parallelism: validated up front for a friendly error at
+        # construction (the step builders re-check); the engine logic itself
+        # is TP-transparent — params/caches stay GLOBAL arrays here, and the
+        # TP step builders' shard_map splits heads/FFN columns (params) and
+        # the KV-head dim (caches) on entry and rejoins on exit.
+        self.tp_shards = int(getattr(pcfg, "tp_shards", 1) or 1)
+        if self.tp_shards > 1:
+            if "tp" not in mesh.axis_names \
+                    or mesh.shape["tp"] != self.tp_shards:
+                raise ValueError(
+                    f"tp_shards={self.tp_shards} needs a 'tp' mesh axis of "
+                    f"that size; mesh has {dict(mesh.shape)} (build one with "
+                    "launch.mesh.make_tp_mesh)")
+            tf.validate_tp(cfg, self.tp_shards)
         self.n_slots, self.max_len = n_slots, max_len
         self.cache_kinds = tf.cache_layer_kinds(cfg)
         self._has_attn = "attn" in self.cache_kinds
@@ -600,5 +614,6 @@ class EngineSession:
             report["accepted_tokens"] / report["drafted_tokens"]
             if report["drafted_tokens"] else float("nan"))
         report["policy"] = sched.policy.name
+        report["tp"] = self.engine.tp_shards
         report["slo"] = slo_report(sched.finished + sched.shed_requests)
         return report
