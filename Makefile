@@ -3,8 +3,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test test-fast test-chaos test-serving test-tp docs-check \
-	docs-links bench bench-collectives bench-serving
+.PHONY: verify test test-fast test-chaos test-serving test-tp test-prefix \
+	docs-check docs-links bench bench-collectives bench-serving
 
 verify:
 	$(PY) -m pytest -x -q
@@ -26,6 +26,12 @@ test-serving:
 	$(PY) -m pytest tests/test_serving.py tests/test_speculative.py \
 		tests/test_slo.py tests/test_scheduling_props.py \
 		tests/test_chaos.py -q
+
+# prefix-caching suite: the trie property invariants plus the warm-vs-cold
+# engine tests, INCLUDING the slow-marked arch x sampling x speculation
+# bit-identity matrix that test-fast deselects
+test-prefix:
+	$(PY) -m pytest tests/test_prefix_props.py tests/test_prefix_caching.py -q
 
 # tensor-parallel suite: the fast TP unit/property tests plus the
 # slow-marked 8-virtual-device stream-identity matrix (subprocesses set

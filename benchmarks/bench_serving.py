@@ -51,6 +51,21 @@ SLO_N_SLOTS = 4
 SLO_MAX_LEN = 80
 SLO_AGE_TICKS = 32
 
+# --prefix scenario: the repeated-system-prompt workload — every request
+# opens with the same 24-token system prefix (3 prefill chunks). With the
+# prefix trie on, the leader pays the cold chunks once and every later
+# sharer adopts the cached boundary row, prefilling only its own tail; a
+# fully-cached probe prompt collapses to ONE chunk, so its TTFT is just
+# the admission wait. All gates are in ticks (deterministic): streams
+# bit-identical to cold prefill, strictly fewer prefill chunks, and the
+# probe's warm TTFT <= 2 ticks (the ISSUE 9 acceptance bar).
+PREFIX_N_REQUESTS = 10
+PREFIX_N_SLOTS = 4
+PREFIX_MAX_LEN = 96
+PREFIX_CHUNK = 8
+PREFIX_SHARE = 24     # the shared system prompt (3 chunks on the grid)
+PREFIX_GAP = 3
+
 # --tp scenario: tensor-parallel decode on 8 virtual devices (subprocess,
 # so the XLA host-platform flag lands before jax initializes). One engine
 # per tp in {1, 2, 4} plus a tp=2 psum baseline, all serving the SAME
@@ -77,7 +92,7 @@ CHAOS_TIMEOUT = 2.0
 
 
 def _build_engine(max_len=MAX_LEN, n_slots=N_SLOTS, prefill_chunk=None,
-                  arch="minicpm_2b"):
+                  arch="minicpm_2b", prefix_cache=False):
     from repro.configs.base import get_config, get_parallel
     from repro.launch.mesh import make_mesh
     from repro.models import transformer as tf
@@ -89,7 +104,8 @@ def _build_engine(max_len=MAX_LEN, n_slots=N_SLOTS, prefill_chunk=None,
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
     engine = ServingEngine(cfg, pcfg, mesh, params, n_slots=n_slots,
                            max_len=max_len, min_prefill_bucket=16,
-                           prefill_chunk=prefill_chunk)
+                           prefill_chunk=prefill_chunk,
+                           prefix_cache=prefix_cache)
     return cfg, engine
 
 
@@ -143,9 +159,10 @@ def run(csv_out):
     spec_rows = run_speculative(csv_out)
     slo_rows = run_slo(csv_out)
     chaos_rows = run_chaos(csv_out)
+    prefix_rows = run_prefix(csv_out)
     return {"speedup": speedup, "continuous": cont, "static": stat,
             "long_prompt": long_rows, "speculative": spec_rows,
-            "slo": slo_rows, "chaos": chaos_rows}
+            "slo": slo_rows, "chaos": chaos_rows, "prefix": prefix_rows}
 
 
 def run_long_prompt(csv_out):
@@ -387,6 +404,96 @@ def run_chaos(csv_out):
     return out
 
 
+def _prefix_workload(vocab):
+    """Repeated-system-prompt workload: every request shares the same
+    PREFIX_SHARE-token opening, plus a fully-cached probe (system prompt +
+    one token) arriving last. Deterministic (seeded)."""
+    import numpy as np
+
+    from repro.serving import Request
+
+    rng = np.random.default_rng(37)
+    system = tuple(int(t) for t in rng.integers(1, vocab, PREFIX_SHARE))
+    reqs = []
+    for i in range(PREFIX_N_REQUESTS):
+        tail = tuple(int(t) for t in
+                     rng.integers(1, vocab, int(rng.integers(3, 9))))
+        reqs.append(Request(i, system + tail,
+                            max_new_tokens=int(rng.integers(6, 13)),
+                            arrival=i * PREFIX_GAP))
+    reqs.append(Request(PREFIX_N_REQUESTS, system + (7,), max_new_tokens=6,
+                        arrival=PREFIX_N_REQUESTS * PREFIX_GAP))
+    return reqs
+
+
+def run_prefix(csv_out):
+    """Prefix-caching scenario: the same repeated-system-prompt workload on
+    a cold engine (prefix cache off) and a warm one (on). Gates are
+    deterministic tick counts: bit-identical streams, strictly fewer
+    prefill chunks, every sharer's warm TTFT <= its cold TTFT, and the
+    fully-cached probe's warm TTFT <= 2 ticks."""
+    from repro.launch.serve import synthetic_workload
+
+    cfg, cold = _build_engine(max_len=PREFIX_MAX_LEN, n_slots=PREFIX_N_SLOTS,
+                              prefill_chunk=PREFIX_CHUNK)
+    _, warm = _build_engine(max_len=PREFIX_MAX_LEN, n_slots=PREFIX_N_SLOTS,
+                            prefill_chunk=PREFIX_CHUNK, prefix_cache=True)
+
+    # compile the prefill buckets + decode outside the clock
+    for eng in (cold, warm):
+        eng.run(synthetic_workload(2, cfg.vocab_size, gap=0, seed=1,
+                                   prompt_lens=(PREFIX_SHARE + 3,
+                                                PREFIX_SHARE + 8),
+                                   max_new=(2, 3)))
+
+    cold_reqs = _prefix_workload(cfg.vocab_size)
+    c = cold.run(cold_reqs)
+    warm_reqs = _prefix_workload(cfg.vocab_size)
+    w = warm.run(warm_reqs)
+
+    assert c["tokens"] == w["tokens"], \
+        "prefix caching must not change token streams"
+    assert w["prefill_chunks"] < c["prefill_chunks"], \
+        "adoption must strictly reduce prefill chunks"
+    assert w["prefix_hits"] >= PREFIX_N_REQUESTS, \
+        "every sharer (and the probe) must adopt the system prompt"
+
+    cold_ttft = {r.rid: r.ttft for r in cold_reqs}
+    warm_ttft = {r.rid: r.ttft for r in warm_reqs}
+    sharers = [r.rid for r in cold_reqs[1:]]
+    assert all(warm_ttft[rid] <= cold_ttft[rid] for rid in sharers), \
+        "a warm sharer must never wait longer than its cold run"
+    drop = sum(cold_ttft[rid] - warm_ttft[rid]
+               for rid in sharers) / len(sharers)
+    assert drop > 0, "warm TTFT must strictly drop on average"
+    probe = PREFIX_N_REQUESTS
+    assert warm_ttft[probe] <= 2, \
+        f"fully-cached prefix TTFT {warm_ttft[probe]} > 2 ticks"
+    assert warm_ttft[probe] < cold_ttft[probe], \
+        "the probe must beat its cold baseline"
+
+    csv_out("serving_prefix_diverged", "0",
+            f"{len(c['tokens'])} warm streams == cold streams "
+            "(deterministic)")
+    csv_out("serving_prefix_chunks", f"{w['prefill_chunks']}",
+            f"cold={c['prefill_chunks']} chunks for the same prompts "
+            "(deterministic)")
+    csv_out("serving_prefix_tokens_reused", f"{w['prefix_tokens_reused']}",
+            f"hits={w['prefix_hits']} over {PREFIX_N_REQUESTS + 1} requests "
+            f"sharing {PREFIX_SHARE} tokens")
+    csv_out("serving_prefix_ttft_drop_ticks", f"{drop:.1f}",
+            f"mean over {len(sharers)} sharers, warm vs cold "
+            "(deterministic)")
+    csv_out("serving_prefix_fully_cached_ttft_ticks",
+            f"{warm_ttft[probe]}",
+            f"cold={cold_ttft[probe]} ticks; acceptance bar <= 2 "
+            "(deterministic)")
+    csv_out("serving_prefix_warm_tok_s", f"{w['tok_s']:.1f}",
+            f"cold={c['tok_s']:.1f} (wall, noisy on shared CPU)")
+    return {"cold": c, "warm": w, "ttft_drop": drop,
+            "fully_cached_ttft": warm_ttft[probe]}
+
+
 def run_tp(csv_out):
     """Tensor-parallel scenario: re-exec in a subprocess so the 8-virtual-
     device XLA flag is set before jax initializes, then re-emit the child's
@@ -518,6 +625,11 @@ def main(argv=None) -> int:
     ap.add_argument("--chaos", action="store_true",
                     help="run only the chaos scenario (replica kill + "
                          "rejoin mid-run, zero token divergence)")
+    ap.add_argument("--prefix", action="store_true",
+                    help="run only the prefix-caching scenario (repeated "
+                         "system prompt, warm vs cold: bit-identical "
+                         "streams, fewer chunks, fully-cached TTFT <= 2 "
+                         "ticks)")
     ap.add_argument("--tp", action="store_true",
                     help="run only the tensor-parallel scenario (8 virtual "
                          "devices in a subprocess; tp in {1,2,4} + psum "
@@ -545,6 +657,8 @@ def main(argv=None) -> int:
         fn = run_slo
     elif args.chaos:
         fn = run_chaos
+    elif args.prefix:
+        fn = run_prefix
     elif args.tp:
         fn = run_tp
     elif args.tp_inner:

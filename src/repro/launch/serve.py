@@ -63,7 +63,7 @@ from repro.models import transformer as tf
 def synthetic_workload(n: int, vocab: int, *, gap: int = 2, seed: int = 0,
                        prompt_lens=(3, 12), max_new=(4, 24),
                        sampling=None, spec=None, repetitive=False,
-                       slo=None) -> list:
+                       slo=None, shared_prefix: int = 0) -> list:
     """Deterministic staggered-arrival request stream (bench + CLI).
 
     ``sampling`` is a base :class:`~repro.serving.sampling.SamplingParams`
@@ -77,17 +77,24 @@ def synthetic_workload(n: int, vocab: int, *, gap: int = 2, seed: int = 0,
     ``slo`` is a :class:`~repro.serving.slo.SLOParams` every request
     carries (None = plain FIFO metadata); for per-class MIXES use
     :func:`repro.serving.traces.generate_trace` instead.
+    ``shared_prefix`` prepends one common ``shared_prefix``-token "system
+    prompt" to every request — the workload shape ``--prefix-cache``
+    exists for (i.i.d. prompts share no prefix by construction).
     """
     import dataclasses as _dc
 
     from repro.serving import Request
     rng = np.random.default_rng(seed)
+    common = tuple(int(t) for t in rng.integers(1, vocab, shared_prefix)) \
+        if shared_prefix else ()
 
     def prompt(plen):
         if not repetitive:
-            return tuple(int(t) for t in rng.integers(1, vocab, plen))
+            return common + tuple(int(t) for t in rng.integers(1, vocab,
+                                                               plen))
         period = rng.integers(1, vocab, int(rng.integers(2, 5)))
-        return tuple(int(period[j % len(period)]) for j in range(plen))
+        return common + tuple(int(period[j % len(period)])
+                              for j in range(plen))
 
     return [
         Request(i,
@@ -131,7 +138,10 @@ def serve_continuous(args):
                            max_len=args.cache_len,
                            prefill_chunk=args.prefill_chunk,
                            stats_reducer=make_stats_reducer(mesh),
-                           drafter=drafter)
+                           drafter=drafter,
+                           prefix_cache=args.prefix_cache,
+                           prefix_cache_nodes=(args.prefix_cache_nodes
+                                               or 256))
     sampling = None
     if args.temperature > 0:
         sampling = SamplingParams(temperature=args.temperature,
@@ -151,7 +161,7 @@ def serve_continuous(args):
                               sampling=sampling, spec=spec,
                               repetitive=spec is not None
                               and not args.draft_model,
-                              slo=slo)
+                              slo=slo, shared_prefix=args.shared_prefix)
     policy = make_policy(args.policy) if args.policy != "fifo" else None
     report = engine.run(reqs, static=args.static, policy=policy)
     spec_note = (f", {report['accepted_tokens']}/"
@@ -161,6 +171,12 @@ def serve_continuous(args):
                 f"{report['shed_requests']} shed, "
                 f"{report['deadline_misses']} deadline misses"
                 if report["policy"] != "fifo" else "")
+    prefix_note = ""
+    if "prefix_cache" in report:
+        pc = report["prefix_cache"]
+        prefix_note = (f", prefix cache: {report['prefix_hits']} hits / "
+                       f"{report['prefix_tokens_reused']} tokens reused, "
+                       f"{pc['nodes']} nodes ({pc['evictions']} evicted)")
     print(f"[{report['mode']}/{report['policy']}] "
           f"{report['requests']} requests, "
           f"{report['total_tokens']} tokens "
@@ -170,7 +186,7 @@ def serve_continuous(args):
           f"({report['tok_s']:.1f} tok/s, {report['ticks']} ticks, "
           f"ttft p50 {report['ttft_ticks_p50']:.1f} ticks, "
           f"latency p95 {report['latency_ticks_p95']:.1f} ticks"
-          f"{slo_note})")
+          f"{slo_note}{prefix_note})")
     return report
 
 
@@ -337,6 +353,21 @@ def main(argv=None):
                     help="continuous mode: TTFT deadline in ticks relative "
                          "to each request's arrival (>= 1; misses are "
                          "counted in telemetry)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="continuous mode: cross-request prefix caching — "
+                         "admissions sharing a cached prompt prefix adopt "
+                         "its slot-cache row and prefill only from the "
+                         "first divergent chunk; streams stay bit-identical "
+                         "(docs/prefix_caching.md; implies --continuous)")
+    ap.add_argument("--prefix-cache-nodes", type=int, default=None,
+                    help="prefix cache: max cached boundary rows before "
+                         "LRU eviction (>= 1; default 256; requires "
+                         "--prefix-cache)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend one common N-token system prompt to "
+                         "every synthetic request (>= 0; the workload "
+                         "shape --prefix-cache accelerates — i.i.d. "
+                         "prompts share nothing)")
     ap.add_argument("--autotune-cache", default=None, metavar="PATH",
                     help="per-deployment autotune cache file; overrides "
                          "REPRO_AUTOTUNE_CACHE and the XDG default (what "
@@ -366,7 +397,7 @@ def main(argv=None):
         return serve_chaos(args)
     if args.continuous or args.static or args.speculate or args.draft_model \
             or args.policy != "fifo" or args.priority is not None \
-            or args.deadline_ticks is not None:
+            or args.deadline_ticks is not None or args.prefix_cache:
         return serve_continuous(args)
     return serve_loop(args)
 
@@ -404,6 +435,19 @@ def _validate_args(ap, args) -> None:
         ap.error(f"--rejoin-backoff must be >= 0, got {args.rejoin_backoff}")
     if args.deadline_ticks is not None and args.deadline_ticks < 1:
         ap.error(f"--deadline-ticks must be >= 1, got {args.deadline_ticks}")
+    if args.prefix_cache_nodes is not None:
+        if not args.prefix_cache:
+            ap.error("--prefix-cache-nodes requires --prefix-cache "
+                     "(the node bound configures the prefix trie)")
+        if args.prefix_cache_nodes < 1:
+            ap.error(f"--prefix-cache-nodes must be >= 1, "
+                     f"got {args.prefix_cache_nodes}")
+    if args.shared_prefix < 0:
+        ap.error(f"--shared-prefix must be >= 0, got {args.shared_prefix}")
+    if args.prefix_cache and args.chaos_seed is not None:
+        ap.error("--prefix-cache is incompatible with --chaos-seed: the "
+                 "trie is per-session state and the chaos baseline/fleet "
+                 "comparison assumes identical tick accounting")
     if args.policy != "fifo":
         if args.static:
             ap.error("--policy slo is incompatible with --static: static "

@@ -333,9 +333,10 @@ def make_prefill_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
         def _prefill_fwd(params, tokens, caches, slot, length, resume):
             with _tp_model_ctx(tps, mesh):
                 if resume:
-                    row_in = jax.tree.map(
-                        lambda full: jax.lax.dynamic_slice_in_dim(
-                            full, slot, 1, axis=1), caches)
+                    # continue the slot's CURRENT row — chunks 2..n of a
+                    # long prompt, or chunk 1 after a prefix-cache adoption
+                    # wrote a shared-prefix row (tf.adopt_prefix)
+                    row_in = tf.extract_cache_row(caches, slot)
                 else:
                     # under TP this allocates the RANK-LOCAL fresh row
                     # (mcfg's KV heads are already divided by tp)
@@ -345,12 +346,7 @@ def make_prefill_step(cfg, pcfg: ParallelConfig, mesh, suite: ShapeSuite,
                 logits, row = tf.prefill_step(
                     params, mcfg, {"tokens": tokens}, row_in,
                     length.reshape(1), jnp.ones((1,), bool), resume=resume)
-
-            def ins(full, r):
-                return jax.lax.dynamic_update_slice_in_dim(
-                    full, r.astype(full.dtype), slot, axis=1)
-
-            return logits, jax.tree.map(ins, caches, row)
+            return logits, tf.adopt_prefix(caches, row, slot)
 
         def greedy_body(params, tokens, caches, slot, length, resume):
             logits, out = _prefill_fwd(params, tokens, caches, slot, length,

@@ -452,6 +452,26 @@ def _cache_read(cache_arr, scale_arr, dtype):
     return cache_arr.astype(dtype)
 
 
+def row_slice(leaf: jax.Array, slot) -> jax.Array:
+    """One batch row of a stacked ``(n_periods, batch, ...)`` cache leaf,
+    kept as a batch-of-1 slice (works for every cache-leaf rank, including
+    the per-slot ``pos`` counters at ``(n_periods, batch)``). The slicing
+    primitive behind chunked-prefill resume and the cross-request prefix
+    cache's row snapshots."""
+    return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1)
+
+
+def row_splice(full: jax.Array, row: jax.Array, slot) -> jax.Array:
+    """Write a batch-of-1 ``row`` back into a stacked cache leaf at
+    ``slot`` — the inverse of :func:`row_slice`. Every other batch row
+    passes through bit-unchanged, which is what lets prefix adoption and
+    chunked-prefill splices interleave with in-flight decode in the other
+    slots. Casts to the cache dtype (identity for same-dtype rows,
+    including int8-quantized K/V and their fp32 scales)."""
+    return jax.lax.dynamic_update_slice_in_dim(
+        full, row.astype(full.dtype), slot, axis=1)
+
+
 def attention_decode(p: Params, cfg: AttnConfig, x: jax.Array,
                      cache: Params, cache_pos: jax.Array):
     """One-token decode against a ring KV cache.

@@ -200,7 +200,15 @@ def wkv_chunked(r, k, v, w_log, u, state, chunk: int):
 
 def _checkpoint_row(seq: jax.Array, lengths: jax.Array | None) -> jax.Array:
     """seq: (B, T, D). Returns (B, 1, D): token ``lengths-1`` per row — the
-    last REAL token — or the last token when ``lengths`` is None."""
+    last REAL token — or the last token when ``lengths`` is None.
+
+    This selection is what makes recurrent carries SHARABLE across
+    requests: the checkpointed carry at length L depends on tokens
+    ``t[0:L]`` only (pads past L are masked out of every state update), so
+    a carry snapshotted after prefilling a shared prompt prefix is
+    bit-identical to the one any later request would have computed over the
+    same tokens — the split-point state the cross-request prefix cache
+    (:mod:`repro.serving.prefix`) stores for SSM/hybrid slots."""
     if lengths is None:
         return seq[:, -1:]
     idx = jnp.clip(lengths - 1, 0)[:, None, None]

@@ -858,6 +858,43 @@ def reset_cache_slots(caches, free_mask):
     return tuple(fix(c) for c in caches)
 
 
+def extract_cache_row(caches, slot):
+    """Copy one slot's row out of per-slot caches as a batch-of-1 pytree.
+
+    The row is the slot's COMPLETE serving state — attention K/V rings with
+    their per-row ``pos``, int8 K/V scales under ``kv_quant``, and the
+    recurrent carries (mamba conv window + scan state, rwkv token-shift +
+    WKV state) the ``lengths=`` prefill paths checkpoint at the true token
+    count. After prefilling tokens ``t[0:p]`` into the slot, the row is a
+    pure function of exactly those tokens (pads never leak — see
+    :func:`prefill_step`), which is the invariant that makes rows sharable
+    ACROSS requests: the cross-request prefix cache
+    (:mod:`repro.serving.prefix`) snapshots rows at prefill-chunk-grid
+    boundaries and :func:`adopt_prefix` copies them into a later request's
+    slot. Also the resume-slice half of chunked prefill
+    (:mod:`repro.launch.step_fns`)."""
+    return jax.tree.map(lambda leaf: L.row_slice(leaf, slot), caches)
+
+
+def adopt_prefix(caches, row, slot):
+    """Splice a batch-of-1 cache ``row`` into ``slot`` — copy-on-admit.
+
+    The inverse of :func:`extract_cache_row` and the row-targeted sibling
+    of :func:`merge_cache_rows` (which merges by boolean mask instead of
+    slot index): every other slot's in-flight state passes through
+    bit-unchanged. Used twice: the chunked-prefill splice that writes a
+    finished prompt-chunk row back into its slot, and cross-request prefix
+    adoption, where a trie-cached row (state after ``p`` shared prompt
+    tokens, ``pos == p``) lands in a fresh slot so admission resumes at the
+    first divergent chunk instead of token 0. Because the row is a pure
+    function of the tokens that produced it, the adopting request's
+    continued prefill and decode are bit-identical to a cold prefill of the
+    same tokens — on full-attention rings and (boundary-aligned) bounded
+    SWA/chunked rings alike."""
+    return jax.tree.map(lambda full, r: L.row_splice(full, r, slot),
+                        caches, row)
+
+
 def prefill_step(params, cfg: ModelConfig, inputs, caches, lengths, active,
                  resume: bool = False):
     """Prefill prompts into per-slot caches (continuous-batching admission).

@@ -15,6 +15,10 @@ the dataflow diagram):
   engine.py     — the engine loop over the slot-aware prefill/decode steps
                   (chunked long-prompt admission, SSM-aware prefill,
                   exact-resume preemption)
+  prefix.py     — cross-request prefix caching: refcounted LRU trie of
+                  chunk-boundary cache rows, adopted copy-on-admit so
+                  shared prompts skip straight to their first divergent
+                  chunk (docs/prefix_caching.md)
   sampling.py   — temperature/top-k/top-p with per-request seeded keys;
                   greedy is the bit-exact default
   speculative.py— speculative decoding: drafter protocol (n-gram prompt
@@ -29,6 +33,7 @@ the dataflow diagram):
 
 from repro.serving.engine import EngineSession, PoisonedLogits, ServingEngine
 from repro.serving.fleet import FailoverPlan, FleetRunner, ReplicaFleet
+from repro.serving.prefix import PrefixCache, PrefixNode
 from repro.serving.request import Request, RequestState
 from repro.serving.sampling import (GREEDY, SamplingParams, sample_tokens,
                                     sample_tokens_block)
@@ -48,6 +53,7 @@ from repro.serving.traces import (DEFAULT_MIX, ClassSpec, TraceSpec,
 __all__ = [
     "ServingEngine", "EngineSession", "PoisonedLogits",
     "Request", "RequestState", "SlotScheduler",
+    "PrefixCache", "PrefixNode",
     "ReplicaFleet", "FleetRunner", "FailoverPlan",
     "TelemetryLog", "StepStats",
     "SamplingParams", "GREEDY", "sample_tokens", "sample_tokens_block",

@@ -57,6 +57,7 @@ from repro.configs.base import ParallelConfig, ShapeSuite
 from repro.launch import step_fns
 from repro.models import transformer as tf
 from repro.serving import sampling
+from repro.serving.prefix import PrefixCache
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import SlotScheduler
 from repro.serving.slo import slo_report
@@ -106,13 +107,28 @@ class ServingEngine:
     works out of the box at a few extra ring slots per bounded layer; set
     0 to reclaim them on engines that never speculate, or raise it (up to
     ``MAX_DRAFT_K``) for wider draft budgets.
+
+    ``prefix_cache=True`` turns on cross-request prefix caching
+    (:mod:`repro.serving.prefix`, docs/prefix_caching.md): each session
+    keeps a trie of slot-cache rows snapshotted at prefill-chunk-grid
+    boundaries, and an admission whose history shares a cached boundary
+    prefix adopts that row (one jitted row copy) and prefills only from
+    the first divergent chunk — warm-prefix TTFT collapses to ~1 tick.
+    Streams stay bit-identical to cold prefill under every policy: rows
+    are pure functions of the tokens that produced them, and adoption
+    lands on the same chunk grid cold admission would have used.
+    ``prefix_cache_nodes`` bounds the trie (LRU eviction; nodes pinned by
+    in-flight admissions are never evicted). When prefix caching is on
+    and the drafter is the default :class:`NgramDrafter`, the trie also
+    serves as its shared n-gram corpus.
     """
 
     def __init__(self, cfg, pcfg: ParallelConfig, mesh, params, *,
                  n_slots: int = 4, max_len: int = 128,
                  min_prefill_bucket: int = 16, prefill_chunk: int | None = None,
                  stats_reducer=None, drafter=None,
-                 draft_headroom: int | None = None):
+                 draft_headroom: int | None = None,
+                 prefix_cache: bool = False, prefix_cache_nodes: int = 256):
         if not tf.supports_slot_serving(cfg):
             raise ValueError(
                 f"{cfg.name}: slot serving needs input_mode='tokens' and no "
@@ -177,6 +193,21 @@ class ServingEngine:
         self.stats_reducer = stats_reducer
         self.drafter = drafter
         self._verify_steps: dict = {}   # draft budget K -> jitted verify
+        # cross-request prefix caching: one jitted row snapshot (extract)
+        # and one jitted copy-on-admit (adopt), slot traced so slot churn
+        # never re-jits; adopt's output pinned to the cache sharding for
+        # the same GSPMD reason as _reset. The trie itself is per-SESSION
+        # (EngineSession builds it) — rows are pure functions of (params,
+        # tokens), so scoping is a freshness choice, not a correctness one.
+        self.prefix_enabled = bool(prefix_cache)
+        self.prefix_cache_nodes = int(prefix_cache_nodes)
+        if self.prefix_enabled:
+            if self.prefix_cache_nodes < 1:
+                raise ValueError(f"prefix_cache_nodes must be >= 1, got "
+                                 f"{prefix_cache_nodes}")
+            self._extract = jax.jit(tf.extract_cache_row)
+            self._adopt = jax.jit(tf.adopt_prefix,
+                                  out_shardings=self._cache_sharding)
 
     # ---------------------------------------------------------------- admin
     def _bucket(self, prompt_len: int) -> int:
@@ -215,12 +246,17 @@ class ServingEngine:
             self._verify_steps[draft_k] = step
         return self._verify_steps[draft_k]
 
-    def _chunk_plan(self, prompt) -> list:
+    def _chunk_plan(self, prompt, start: int = 0) -> list:
         """Split a prompt into prefill chunks — a pure function of the
         prompt length and engine constants (never of scheduling), so every
-        policy chunks identically and token streams match bit-for-bit."""
+        policy chunks identically and token streams match bit-for-bit.
+        ``start`` (always a multiple of ``prefill_chunk``: prefix-cache
+        lookups return chunk-grid boundaries only) skips tokens already
+        adopted from the prefix trie; the remaining chunks coincide with
+        the cold plan's tail, so a warm admission feeds exactly
+        ``ceil((len - start) / prefill_chunk)`` chunks."""
         c = self.prefill_chunk
-        return [prompt[i:i + c] for i in range(0, len(prompt), c)]
+        return [prompt[i:i + c] for i in range(start, len(prompt), c)]
 
     # ---------------------------------------------------------------- run
     def start(self, requests=(), *, static: bool = False,
@@ -319,9 +355,25 @@ class EngineSession:
         self.samp = sampling.slot_arrays(engine.n_slots)
         self.pending_chunks: dict = {}   # slot -> remaining prompt chunks
         self._resume_last: dict = {}     # slot -> journal tail to re-feed
+        # cross-request prefix caching (docs/prefix_caching.md): the trie
+        # is session state — rows snapshotted here were produced by this
+        # session's caches, and per-session scoping keeps the fleet story
+        # simple (each replica shares within itself). Pins hold in-flight
+        # adoptions against LRU eviction; _prefix_hist remembers the full
+        # normalized history per prefilling slot so boundary snapshots key
+        # on tokens[0:p] even after req.tokens grows.
+        self.prefix = (PrefixCache(grid=engine.prefill_chunk,
+                                   max_nodes=engine.prefix_cache_nodes)
+                       if engine.prefix_enabled else None)
+        self._prefix_pins: dict = {}     # slot -> pinned trie key
+        self._prefix_hist: dict = {}     # slot -> normalized history tuple
         self.log = TelemetryLog(engine.stats_reducer)
         self.now = 0
         self._t0 = time.perf_counter()
+        if self.prefix is not None and isinstance(engine.drafter,
+                                                  NgramDrafter) \
+                and engine.drafter.corpus is None:
+            engine.drafter.corpus = self.prefix
         for req in requests:
             self.submit(req)
 
@@ -332,6 +384,11 @@ class EngineSession:
         if req.spec is not None:
             if eng.drafter is None:
                 eng.drafter = NgramDrafter()
+                if self.prefix is not None:
+                    # trie doubles as the shared n-gram drafter corpus:
+                    # cached sequences from OTHER requests seed proposals
+                    # before a request's own history has any n-grams
+                    eng.drafter.corpus = self.prefix
             if getattr(eng.drafter, "n_slots", eng.n_slots) != eng.n_slots:
                 raise ValueError(
                     "drafter slot table does not match the engine "
@@ -356,6 +413,15 @@ class EngineSession:
             self.engine.drafter.release(slot)
             self._ctrls.pop(req.rid, None)
 
+    def _unpin(self, slot: int) -> None:
+        """Drop a slot's prefix-trie pin (if any) and its history note —
+        the adopted node becomes LRU-evictable again. Called when the
+        slot's final chunk lands, on preemption, and on :meth:`abort`."""
+        self._prefix_hist.pop(slot, None)
+        key = self._prefix_pins.pop(slot, None)
+        if key is not None and self.prefix is not None:
+            self.prefix.release(key)
+
     def tick(self) -> list:
         """Run one engine iteration; returns (and logs) this tick's local
         stats vector (see ``telemetry.STATS_FIELDS``). Raises
@@ -372,6 +438,8 @@ class EngineSession:
         accepted = 0
         resumed = 0
         deadline_misses = 0
+        prefix_hits = 0
+        prefix_reused = 0
         freed = np.zeros(eng.n_slots, bool)
 
         # --- SLO hooks: shed hopeless queued work, then evict slots the
@@ -392,6 +460,7 @@ class EngineSession:
                 req = sched.active[slot]
                 self.pending_chunks.pop(slot, None)
                 self._resume_last.pop(slot, None)
+                self._unpin(slot)
                 sampling.set_slot(samp, slot, None)
                 if req.spec is not None:
                     eng.drafter.release(slot)
@@ -417,7 +486,27 @@ class EngineSession:
                 self._resume_last[slot] = int(req.tokens[-1])
                 resumed += len(req.tokens)
                 req.resumed_tokens += len(req.tokens)
-            self.pending_chunks[slot] = eng._chunk_plan(history)
+            start = 0
+            if self.prefix is not None:
+                # prefix adoption AFTER history normalization: a resumed
+                # request matches against its journal-extended history,
+                # so a preempted request re-adopts its own boundaries.
+                # lookup() caps the match at len(history)-1 — at least one
+                # chunk always runs so the final chunk emits first-token
+                # logits through the ordinary prefill path.
+                p, node = self.prefix.lookup(history)
+                if node is not None:
+                    self.caches = eng._adopt(
+                        self.caches, node.row, jnp.asarray(slot, jnp.int32))
+                    self.prefix.acquire(node.key)
+                    self._prefix_pins[slot] = node.key
+                    start = p
+                    req.prefilled = p    # resume=True from the first chunk
+                    req.prefix_reused += p
+                    prefix_hits += 1
+                    prefix_reused += p
+                self._prefix_hist[slot] = tuple(history)
+            self.pending_chunks[slot] = eng._chunk_plan(history, start=start)
             sampling.set_slot(samp, slot, req.sampling)
             if req.spec is not None:
                 self._ctrls[req.rid] = AdaptiveDraftController(req.spec)
@@ -449,8 +538,24 @@ class EngineSession:
                               if sampled_req else None))
             req.prefilled += len(chunk)
             chunks_fed += 1
+            if self.prefix is not None:
+                # snapshot the slot row at every chunk-grid boundary: the
+                # row there is a pure function of history[:p] + the grid
+                # (pads suppressed by ring validity / lengths= masking),
+                # which is exactly what makes it adoptable by ANY later
+                # request sharing those tokens. Valid on the final chunk
+                # too — the post-prefill row precedes first-token
+                # sampling, so it never depends on sampler state.
+                p = req.prefilled
+                hist = self._prefix_hist.get(slot, ())
+                if p % eng.prefill_chunk == 0 and p <= len(hist):
+                    key = hist[:p]
+                    if key not in self.prefix:
+                        self.prefix.insert(key, eng._extract(
+                            self.caches, jnp.asarray(slot, jnp.int32)))
             if final:
                 del self.pending_chunks[slot]
+                self._unpin(slot)
                 req.state = RequestState.ACTIVE
                 if slot in self._resume_last:
                     # journal is authoritative: discard the re-derived
@@ -579,6 +684,8 @@ class EngineSession:
             "preemptions": len(preempt_slots),
             "shed_requests": len(shed_now),
             "deadline_misses": deadline_misses,
+            "prefix_hits": prefix_hits,
+            "prefix_tokens_reused": prefix_reused,
         })
         self.log.step(now, vec)
         self.now += 1
@@ -597,6 +704,9 @@ class EngineSession:
         returns them — journals intact — for re-queueing elsewhere."""
         self.pending_chunks.clear()
         self._resume_last.clear()
+        for slot in list(self._prefix_pins):
+            self._unpin(slot)
+        self._prefix_hist.clear()
         return self.sched.drain_active()
 
     def report(self) -> dict:
@@ -608,8 +718,11 @@ class EngineSession:
         for field in ("sampled_tokens", "prefill_chunks", "drafted_tokens",
                       "accepted_tokens", "resumed_tokens", "failovers",
                       "quarantines", "preemptions", "shed_requests",
-                      "deadline_misses"):
+                      "deadline_misses", "prefix_hits",
+                      "prefix_tokens_reused"):
             report[field] = int(sum(getattr(s, field) for s in log.steps))
+        if self.prefix is not None:
+            report["prefix_cache"] = self.prefix.stats()
         report["acceptance_rate"] = (
             report["accepted_tokens"] / report["drafted_tokens"]
             if report["drafted_tokens"] else float("nan"))

@@ -85,6 +85,8 @@ class Request:
     failovers: int = 0               # times re-queued off a dead replica
     resumed_tokens: int = 0          # journal tokens replayed across resumes
     preemptions: int = 0             # times evicted mid-flight for priority
+    prefix_reused: int = 0           # prompt tokens adopted from the prefix
+    #                                  trie across this request's admissions
     deadline_counted: bool = dataclasses.field(default=False, repr=False)
 
     def __post_init__(self):

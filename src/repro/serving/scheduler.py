@@ -65,6 +65,11 @@ class SlotScheduler:
         and the merged stream is bit-identical to an undisturbed run
         (docs/robustness.md). ``exact=False`` is the legacy lossy restart —
         the journal is discarded and generation restarts from the prompt.
+        Under prefix caching the engine runs its trie lookup on that same
+        normalized history at re-admission, so a preempted/failed-over
+        request re-adopts its own earlier boundary snapshots instead of
+        re-prefilling them (docs/prefix_caching.md) — the requeue itself
+        stays cache-oblivious.
 
         Requests are re-queued in their ORIGINAL arrival order (ties by
         rid), not in the caller's iteration order: when several replicas

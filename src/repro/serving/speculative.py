@@ -158,12 +158,26 @@ class NgramDrafter(Drafter):
     Free to run on the CPU simulator, surprisingly effective on repetitive
     text, and exactly the prompt-lookup decoding trick used as the
     model-free baseline in assisted-generation stacks.
+
+    ``corpus`` (optional — the engine wires the session's
+    :class:`~repro.serving.prefix.PrefixCache` in when prefix caching is
+    on) is a shared fallback searched AFTER the request's own history
+    misses: anything with a ``sequences() -> list[tuple]`` view of cached
+    token runs. Shared system prompts and few-shot prefixes are exactly
+    the text many requests repeat, so the trie is strong draft material a
+    single request's history cannot see. Corpus proposals depend on what
+    OTHER requests have prefilled, so they may change how many ticks a
+    stream takes between runs with different trie contents — never the
+    stream itself (the verify step accepts only what the committed
+    greedy/sampled stream would emit). Own-history proposals keep their
+    precedence, so with an empty or absent corpus behavior is unchanged.
     """
 
-    def __init__(self, max_ngram: int = 3):
+    def __init__(self, max_ngram: int = 3, corpus=None):
         if max_ngram < 1:
             raise ValueError(f"max_ngram must be >= 1, got {max_ngram}")
         self.max_ngram = max_ngram
+        self.corpus = corpus
 
     def propose(self, slot: int, req, k: int) -> list:
         hist = tuple(req.prompt) + tuple(req.tokens)
@@ -180,6 +194,24 @@ class NgramDrafter(Drafter):
                     if follow:
                         return [int(t) for t in follow]
                     break               # suffix only recurs at the very end
+        if self.corpus is not None:
+            return self._propose_from_corpus(hist, n_cap, k)
+        return []
+
+    def _propose_from_corpus(self, hist: tuple, n_cap: int, k: int) -> list:
+        """Shared-corpus fallback: longest trailing n-gram first, scanning
+        the corpus sequences in their (deterministic) insertion order and
+        taking the most recent in-sequence occurrence."""
+        seqs = self.corpus.sequences()
+        for n in range(min(n_cap, len(hist)), 0, -1):
+            suffix = hist[-n:]
+            for seq in seqs:
+                for start in range(len(seq) - n, -1, -1):
+                    if seq[start:start + n] == suffix:
+                        follow = seq[start + n:start + n + k]
+                        if follow:
+                            return [int(t) for t in follow]
+                        break       # match only at the sequence's very end
         return []
 
 

@@ -59,11 +59,19 @@ from repro.core.collectives import CollectiveConfig, all_reduce
 #   deadline_misses — requests whose TTFT deadline was missed this tick:
 #                    counted once per request, either when its first token
 #                    lands past the deadline or when it is shed
+#   prefix_hits    — admissions this tick that adopted a cached shared
+#                    prefix from the cross-request prefix trie
+#                    (serving/prefix.py) instead of prefilling from token 0
+#   prefix_tokens_reused — prompt tokens those adoptions skipped (the
+#                    re-prefill work the trie saved; docs/prefix_caching.md)
+# NOTE: new counters are APPENDED — regression tests pin positional slices
+# of this tuple, and StepStats gives appended fields 0.0 defaults so rows
+# recorded before a field existed still parse.
 STATS_FIELDS = ("queue_depth", "active_slots", "new_tokens", "prefills",
                 "prefill_chunks", "sampled_tokens", "drafted_tokens",
                 "accepted_tokens", "failovers", "resumed_tokens",
                 "quarantines", "preemptions", "shed_requests",
-                "deadline_misses")
+                "deadline_misses", "prefix_hits", "prefix_tokens_reused")
 
 # b=1: latency-bound single-block pipeline; "auto": measured autotuner hit
 # if one exists for this (p, nbytes, dtype, fabric), else the cost-model
@@ -153,6 +161,8 @@ class StepStats:
     preemptions: float = 0.0
     shed_requests: float = 0.0
     deadline_misses: float = 0.0
+    prefix_hits: float = 0.0
+    prefix_tokens_reused: float = 0.0
 
 
 class TelemetryLog:

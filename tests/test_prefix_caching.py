@@ -1,0 +1,310 @@
+"""Cross-request prefix caching: warm-vs-cold bit-identity across
+architectures, sampling, and speculation; exact chunk-count regression;
+slot-reuse residue; SWA ring interplay; preemption pins; telemetry; CLI
+fail-fast validation.
+
+The acceptance bar (ISSUE 9): streams served with ``prefix_cache=True``
+equal the cold-prefill streams bit-for-bit under every policy — adoption
+moves WHEN prefill work happens (skipping already-computed chunks), never
+WHAT the request decodes — while a fully-cached prefix collapses TTFT to
+the admission wait.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models.transformer import SubSpec
+from repro.serving import (STATS_FIELDS, PrefixCache, Request,
+                           SamplingParams, SLOParams, SLOPolicy, SpecParams,
+                           NgramDrafter, PriorityClass, stats_vector)
+
+from test_serving import make_engine, tiny_cfg
+
+CHUNK = 8
+
+
+def _shared_reqs(vocab, *, share=16, sampling=None, spec=None, gap=4,
+                 max_new=5, seed=7):
+    """A leader plus two sharers: all three share the first ``share``
+    prompt tokens (a chunk-grid multiple), the third repeats the leader's
+    FULL prompt. Arrivals are staggered past the leader's chunk count so
+    its boundary snapshots exist before any sharer admits."""
+    rng = np.random.default_rng(seed)
+    shared = tuple(int(t) for t in rng.integers(1, vocab, share))
+    t_lead = tuple(int(t) for t in rng.integers(1, vocab, 4))
+    t_div = tuple(int(t) for t in rng.integers(1, vocab, 5))
+
+    def samp(i):
+        return None if sampling is None else \
+            dataclasses.replace(sampling, seed=sampling.seed + i)
+
+    return [Request(0, shared + t_lead, max_new_tokens=max_new,
+                    arrival=0, sampling=samp(0), spec=spec),
+            Request(1, shared + t_div, max_new_tokens=max_new,
+                    arrival=gap, sampling=samp(1), spec=spec),
+            Request(2, shared + t_lead, max_new_tokens=max_new,
+                    arrival=2 * gap, sampling=samp(2), spec=spec)]
+
+
+def _warm_cold(cfg=None, *, n_slots=3, max_len=64, **kw):
+    _, cold = make_engine(cfg=cfg, n_slots=n_slots, max_len=max_len,
+                          prefill_chunk=CHUNK, **kw)
+    cfg2, warm = make_engine(cfg=cfg, n_slots=n_slots, max_len=max_len,
+                             prefill_chunk=CHUNK, prefix_cache=True, **kw)
+    return cfg2, cold, warm
+
+
+# ==========================================================================
+# the acceptance bar: warm streams == cold streams, TTFT collapses
+# ==========================================================================
+
+def test_warm_streams_bit_identical_and_ttft_collapses():
+    cfg, cold, warm = _warm_cold()
+    a = cold.run(_shared_reqs(cfg.vocab_size))
+    reqs = _shared_reqs(cfg.vocab_size)
+    b = warm.run(reqs)
+    assert a["tokens"] == b["tokens"]
+    assert b["prefix_hits"] == 2                  # both sharers adopt
+    assert b["prefix_tokens_reused"] == 32        # 16 tokens each
+    assert reqs[1].prefix_reused == 16 and reqs[2].prefix_reused == 16
+    # the fully-shared repeat (20-token prompt, 16 cached) feeds ONE chunk:
+    # first token lands the admission tick — TTFT == wait + 0
+    assert reqs[2].ttft == 0
+    # cold baseline pays all 3 chunks -> TTFT 2 for the same prompt
+    assert a["prefill_chunks"] == 9 and b["prefill_chunks"] == 5
+
+
+def test_warm_static_matches_cold_static():
+    """Policy independence: static batch-sync admission with the trie on
+    still equals the cold static streams (adoption lands on the same chunk
+    grid; only slot timing differs)."""
+    cfg, cold, warm = _warm_cold()
+    reqs = lambda: _shared_reqs(cfg.vocab_size, gap=0)
+    a = cold.run(reqs(), static=True)
+    b = warm.run(reqs(), static=True)
+    c = cold.run(reqs())
+    assert a["tokens"] == b["tokens"] == c["tokens"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["minicpm_2b", "rwkv6_7b",
+                                  "jamba_v0_1_52b"])
+def test_warm_cold_matrix(arch):
+    """The full bit-identity matrix: attention / recurrent / hybrid stacks
+    x greedy / seeded-sampled x speculation off / on. One cold and one warm
+    engine per arch; every combination's streams must match exactly."""
+    cfg, cold, warm = _warm_cold(cfg=get_config(arch, reduced=True))
+    sp = SamplingParams(temperature=0.9, top_p=0.85, seed=11)
+    for sampling in (None, sp):
+        for spec in (None, SpecParams(draft_k=4)):
+            mk = lambda: _shared_reqs(cfg.vocab_size, sampling=sampling,
+                                      spec=spec)
+            a, b = cold.run(mk()), warm.run(mk())
+            mode = (f"{arch}/"
+                    f"{'sampled' if sampling else 'greedy'}/"
+                    f"{'spec' if spec else 'plain'}")
+            assert a["tokens"] == b["tokens"], mode
+            assert b["prefix_hits"] == 2, mode
+
+
+def test_warm_preempt_resume_matches_undisturbed():
+    """Prefix caching composes with exact-resume preemption: the victim's
+    re-admission re-matches its journal-extended history against the trie
+    (re-adopting its own boundaries) and the stream still equals the
+    undisturbed FIFO run. Exercises the preemption unpin path."""
+    cfg, cold, warm = _warm_cold(n_slots=1, max_len=48)
+    victim_prompt = tuple(int(t) for t in
+                          np.random.default_rng(3).integers(1, 101, 17))
+
+    def mk():
+        return [Request(0, victim_prompt, max_new_tokens=16, arrival=0,
+                        slo=SLOParams(priority=PriorityClass.BATCH)),
+                Request(1, (7, 3), max_new_tokens=3, arrival=4,
+                        slo=SLOParams(priority=PriorityClass.INTERACTIVE,
+                                      deadline_ticks=8))]
+
+    base = cold.run(mk())
+    slo = warm.run(mk(), policy=SLOPolicy(age_ticks=100))
+    assert slo["preemptions"] >= 1
+    assert slo["tokens"] == base["tokens"]
+    # the resumed victim re-adopted a boundary it snapshotted pre-eviction
+    assert slo["prefix_hits"] >= 1
+    assert slo["prefix_cache"]["pinned"] == 0     # every pin released
+
+
+# ==========================================================================
+# satellite: exact chunk-count regression (telemetry-checked)
+# ==========================================================================
+
+@pytest.mark.parametrize("share,plen", [(16, 17), (16, 22), (16, 24),
+                                        (24, 25), (24, 30)])
+def test_sharer_issues_exactly_ceil_len_minus_k_chunks(share, plen):
+    """A prompt sharing ``share`` (grid-aligned, cached) tokens issues
+    exactly ceil((plen - share) / prefill_chunk) prefill chunks."""
+    cfg, warm = make_engine(n_slots=1, max_len=64, prefill_chunk=CHUNK,
+                            prefix_cache=True)
+    rng = np.random.default_rng(1)
+    lead = tuple(int(t) for t in rng.integers(1, cfg.vocab_size, 26))
+    tail = tuple(int(t) for t in rng.integers(1, cfg.vocab_size,
+                                              plen - share))
+    sharer = lead[:share] + tail
+    assert len(sharer) == plen
+    # n_slots=1 serializes: the leader's boundaries (8/16/24) are all
+    # snapshotted before the sharer admits
+    reqs = [Request(0, lead, max_new_tokens=2, arrival=0),
+            Request(1, sharer, max_new_tokens=2, arrival=0)]
+    report = warm.run(reqs)
+    lead_chunks = -(-len(lead) // CHUNK)
+    want = -(-(plen - share) // CHUNK)
+    assert reqs[1].prefix_reused == share
+    assert report["prefill_chunks"] == lead_chunks + want
+    assert report["prefix_tokens_reused"] == share
+
+
+def test_unshared_prompt_pays_full_cold_chunks():
+    """No false sharing: a prompt diverging in its FIRST chunk adopts
+    nothing and chunks exactly like a cold admission."""
+    cfg, warm = make_engine(n_slots=1, max_len=64, prefill_chunk=CHUNK,
+                            prefix_cache=True)
+    rng = np.random.default_rng(2)
+    a = tuple(int(t) for t in rng.integers(1, cfg.vocab_size, 20))
+    b = tuple(int(t) for t in rng.integers(1, cfg.vocab_size, 20))
+    assert a[:CHUNK] != b[:CHUNK]
+    report = warm.run([Request(0, a, max_new_tokens=2, arrival=0),
+                       Request(1, b, max_new_tokens=2, arrival=0)])
+    assert report["prefix_hits"] == 0
+    assert report["prefill_chunks"] == 6          # 3 + 3, all cold
+
+
+# ==========================================================================
+# slot reuse, SWA rings, LRU pressure
+# ==========================================================================
+
+def test_adoption_into_reused_slot_leaves_no_residue():
+    """Copy-on-admit overwrites the WHOLE row: a sharer admitted into a
+    slot previously occupied by an unrelated request decodes exactly as on
+    a fresh engine, and an unrelated request admitted after an adoption
+    sees no trie residue either."""
+    cfg, cold, warm = _warm_cold(n_slots=1)
+    rng = np.random.default_rng(4)
+    shared = tuple(int(t) for t in rng.integers(1, cfg.vocab_size, 16))
+    other = tuple(int(t) for t in rng.integers(1, cfg.vocab_size, 11))
+    reqs = lambda: [Request(0, shared + (9, 9), max_new_tokens=4, arrival=0),
+                    Request(1, other, max_new_tokens=4, arrival=0),
+                    Request(2, shared + (9, 9), max_new_tokens=4, arrival=0)]
+    a, b = cold.run(reqs()), warm.run(reqs())
+    assert a["tokens"] == b["tokens"]
+    assert b["prefix_hits"] == 1                  # rid 2, through rid 1's slot
+
+
+def test_swa_ring_slack_warm_equals_cold():
+    """Bounded (sliding-window) rings: boundary rows are still pure
+    functions of tokens[:p] ON THE COLD CHUNK GRID, so adoption + the
+    remaining chunks replay the cold plan exactly — including with the
+    draft-headroom ring slack the engine adds by default."""
+    swcfg = tiny_cfg(name="prefix-swa",
+                     pattern=((SubSpec(kind="attn", sliding_window=16),
+                               "mlp"),))
+    cfg, cold, warm = _warm_cold(cfg=swcfg, n_slots=2)
+    rng = np.random.default_rng(5)
+    shared = tuple(int(t) for t in rng.integers(1, 101, 24))
+    reqs = lambda: [
+        Request(0, shared + (3, 1, 4), max_new_tokens=4, arrival=0),
+        Request(1, shared + (2, 7), max_new_tokens=4, arrival=5)]
+    a, b = cold.run(reqs()), warm.run(reqs())
+    assert a["tokens"] == b["tokens"]
+    assert b["prefix_hits"] == 1 and b["prefix_tokens_reused"] == 24
+
+
+def test_lru_pressure_keeps_streams_identical():
+    """A one-node trie evicts on every fresh boundary, yet streams never
+    change — eviction only forfeits reuse, never correctness."""
+    cfg, cold, _ = _warm_cold()
+    _, tiny_trie = make_engine(n_slots=3, max_len=64, prefill_chunk=CHUNK,
+                               prefix_cache=True, prefix_cache_nodes=1)
+    a = cold.run(_shared_reqs(cfg.vocab_size))
+    b = tiny_trie.run(_shared_reqs(cfg.vocab_size))
+    assert a["tokens"] == b["tokens"]
+    assert b["prefix_cache"]["nodes"] <= 1
+    assert b["prefix_cache"]["evictions"] > 0
+
+
+def test_engine_rejects_bad_node_bound():
+    with pytest.raises(ValueError, match="prefix_cache_nodes"):
+        make_engine(prefix_cache=True, prefix_cache_nodes=0)
+
+
+# ==========================================================================
+# telemetry: appended fields, drift guard, report plumbing
+# ==========================================================================
+
+def test_prefix_counters_appended_to_stats_fields():
+    """Positional pin: the prefix counters ride the END of the stats row
+    (earlier slices are pinned by the speculative and chaos suites)."""
+    assert STATS_FIELDS[14:16] == ("prefix_hits", "prefix_tokens_reused")
+    with pytest.raises(ValueError, match="drifted"):
+        stats_vector({f: 0 for f in STATS_FIELDS[:-1]})
+
+
+def test_report_carries_prefix_stats_only_when_enabled():
+    cfg, cold, warm = _warm_cold()
+    a = cold.run(_shared_reqs(cfg.vocab_size))
+    b = warm.run(_shared_reqs(cfg.vocab_size))
+    assert "prefix_cache" not in a
+    assert a["prefix_hits"] == 0 and a["prefix_tokens_reused"] == 0
+    pc = b["prefix_cache"]
+    assert pc["hits"] == b["prefix_hits"] == 2
+    assert pc["tokens_reused"] == b["prefix_tokens_reused"]
+    assert pc["pinned"] == 0 and pc["insertions"] >= 2
+
+
+# ==========================================================================
+# the trie as shared n-gram drafter corpus
+# ==========================================================================
+
+def test_ngram_corpus_fallback_proposes_from_trie():
+    trie = PrefixCache(grid=4, max_nodes=8)
+    trie.insert((5, 9, 2, 6), "row")
+    drafter = NgramDrafter(corpus=trie)
+    # own history has no recurring n-gram; the corpus continues (5, 9)
+    req = Request(0, (1, 3, 5, 9), max_new_tokens=4)
+    assert drafter.propose(0, req, k=2) == [2, 6]
+    # own-history matches keep precedence over the corpus
+    rep = Request(1, (5, 9, 2, 5, 9), max_new_tokens=4)
+    assert drafter.propose(0, rep, k=1) == [2]
+    # no corpus -> unchanged miss behavior
+    assert NgramDrafter().propose(0, req, k=2) == []
+
+
+def test_warm_speculative_streams_match_and_corpus_attached():
+    """prefix_cache + speculation: the session wires the trie in as the
+    lazily-created NgramDrafter's corpus, and warm speculative streams
+    still equal cold non-speculative streams."""
+    cfg, cold, warm = _warm_cold()
+    spec = SpecParams(draft_k=3)
+    a = cold.run(_shared_reqs(cfg.vocab_size))
+    b = warm.run(_shared_reqs(cfg.vocab_size, spec=spec))
+    assert a["tokens"] == b["tokens"]
+    assert isinstance(warm.drafter, NgramDrafter)
+    assert warm.drafter.corpus is not None        # session attached the trie
+
+
+# ==========================================================================
+# satellite: CLI fail-fast validation
+# ==========================================================================
+
+def test_serve_cli_rejects_bad_prefix_flags_before_tracing():
+    from repro.launch import serve
+    bad = [
+        ["--prefix-cache-nodes", "8"],                    # needs the flag
+        ["--prefix-cache", "--prefix-cache-nodes", "0"],
+        ["--prefix-cache", "--prefix-cache-nodes", "-3"],
+        ["--prefix-cache", "--chaos-seed", "1"],
+    ]
+    for argv in bad:
+        with pytest.raises(SystemExit) as e:
+            serve.main(argv)
+        assert e.value.code == 2, argv        # argparse usage error, no jit

@@ -1,0 +1,240 @@
+"""Property-based invariants for the cross-request prefix trie.
+
+Host-only (no model, no jax): :class:`repro.serving.prefix.PrefixCache`
+treats rows as opaque payloads, so these suites drive it with token-derived
+sentinels and check the contracts the engine's bit-identity depends on:
+
+* **no aliasing** — a lookup never returns a node whose key is not an
+  EXACT prefix of the query (two prompts sharing k tokens share nodes only
+  up to k, never after the divergence point);
+* **refcount balance** — any interleaving of acquire/release pairs ends
+  with every node unpinned, and a surplus release raises;
+* **evicted never served** — once evicted, a key can neither be looked up
+  nor acquired (eviction pops the node from the dict);
+* **longest-match maximality** — lookup returns the LONGEST cached
+  boundary prefix strictly shorter than the query, or a miss when none
+  exists.
+
+Runs with or without hypothesis via tests/_hyp.py (the bare-env shim
+replays boundary values plus a fixed pseudo-random sample).
+"""
+
+import pytest
+
+from repro.serving.prefix import PrefixCache
+
+from _hyp import given, settings, st
+
+
+def _row(key):
+    """Sentinel payload derived from the key — lets aliasing checks verify
+    the SERVED row matches the served key, not just the returned length."""
+    return ("row", tuple(key))
+
+
+def _boundaries(prompt, grid):
+    return [prompt[:p] for p in range(grid, len(prompt), grid)
+            if p % grid == 0]
+
+
+def _prompt(rng_seed, length, vocab=7):
+    # deterministic token stream per (seed, length): small vocab on purpose
+    # so divergent prompts still share long common prefixes sometimes
+    out = []
+    x = rng_seed * 2654435761 % 2**32
+    for _ in range(length):
+        x = (1103515245 * x + 12345) % 2**31
+        out.append(1 + x % vocab)
+    return tuple(out)
+
+
+# ==========================================================================
+# no aliasing of divergent prefixes
+# ==========================================================================
+
+@settings(max_examples=60, deadline=None)
+@given(grid=st.integers(1, 5), seed_a=st.integers(0, 9),
+       seed_b=st.integers(0, 9), len_a=st.integers(1, 40),
+       len_b=st.integers(1, 40))
+def test_lookup_serves_only_exact_prefixes(grid, seed_a, seed_b,
+                                           len_a, len_b):
+    cache = PrefixCache(grid=grid, max_nodes=64)
+    a, b = _prompt(seed_a, len_a), _prompt(seed_b, len_b)
+    for key in _boundaries(a, grid):
+        cache.insert(key, _row(key))
+    p, node = cache.lookup(b)
+    if node is None:
+        assert p == 0
+        return
+    # the served node is an exact prefix of the query, on the grid,
+    # strictly shorter than the query, and carries ITS OWN row
+    assert p == node.length and p % grid == 0 and p < len(b)
+    assert b[:p] == node.key
+    assert node.row == _row(node.key)
+
+
+@settings(max_examples=40, deadline=None)
+@given(grid=st.integers(1, 4), share=st.integers(0, 12),
+       tail=st.integers(1, 8))
+def test_divergent_prompts_never_share_past_divergence(grid, share, tail):
+    """Two prompts identical for ``share`` tokens then diverging: every
+    boundary of both is cached, yet each lookup stays on its own branch."""
+    cache = PrefixCache(grid=grid, max_nodes=256)
+    common = _prompt(3, share)
+    a = common + tuple([1] * tail)
+    b = common + tuple([2] * tail)
+    for prompt in (a, b):
+        for key in _boundaries(prompt, grid):
+            cache.insert(key, _row(key))
+    for prompt in (a, b):
+        p, node = cache.lookup(prompt)
+        if node is not None:
+            assert prompt[:p] == node.key      # own branch only
+            assert node.row == _row(prompt[:p])
+
+
+# ==========================================================================
+# refcount balance
+# ==========================================================================
+
+@settings(max_examples=40, deadline=None)
+@given(grid=st.integers(1, 3), n_keys=st.integers(1, 6),
+       pins=st.integers(0, 5), seed=st.integers(0, 99))
+def test_refcounts_balance_to_zero(grid, n_keys, pins, seed):
+    cache = PrefixCache(grid=grid, max_nodes=64)
+    keys = [_prompt(k, grid * (1 + k % 4)) for k in range(n_keys)]
+    for key in keys:
+        cache.insert(key, _row(key))
+    # interleave acquires, then release them all in a scrambled order
+    acquired = [keys[(seed + i) % len(keys)] for i in range(pins)]
+    for key in acquired:
+        cache.acquire(key)
+    for key in reversed(acquired):
+        cache.release(key)
+    assert cache.stats()["pinned"] == 0
+    for key in keys:                    # surplus release always raises
+        with pytest.raises(ValueError):
+            cache.release(key)
+
+
+# ==========================================================================
+# evicted nodes are never served
+# ==========================================================================
+
+@settings(max_examples=40, deadline=None)
+@given(grid=st.integers(1, 3), max_nodes=st.integers(1, 4),
+       n_insert=st.integers(1, 12))
+def test_evicted_keys_unreachable(grid, max_nodes, n_insert):
+    cache = PrefixCache(grid=grid, max_nodes=max_nodes)
+    keys = [_prompt(k, grid) for k in range(n_insert)]
+    keys = list(dict.fromkeys(keys))    # distinct grid-length keys
+    for key in keys:
+        cache.insert(key, _row(key))
+    assert len(cache) <= max_nodes
+    live = set(cache.keys())
+    for key in keys:
+        if tuple(key) in live:
+            continue
+        # evicted: invisible to lookup (extend by one token so the
+        # len-1 cap still admits the key itself) and acquire refuses
+        p, node = cache.lookup(tuple(key) + (1,))
+        assert node is None or node.key != tuple(key)
+        with pytest.raises(KeyError):
+            cache.acquire(key)
+    assert cache.stats()["evictions"] == len(keys) - len(live)
+
+
+def test_pinned_nodes_survive_eviction_pressure():
+    cache = PrefixCache(grid=2, max_nodes=2)
+    hot, cold = (1, 2), (3, 4)
+    cache.insert(hot, _row(hot))
+    cache.insert(cold, _row(cold))
+    cache.acquire(hot)
+    for i in range(5, 15, 2):           # pressure: many fresh inserts
+        cache.insert((i, i + 1), _row((i, i + 1)))
+    assert hot in cache                 # pinned: never evicted
+    assert cold not in cache            # unpinned LRU victim
+    cache.release(hot)
+    cache.insert((90, 91), _row((90, 91)))
+    cache.insert((92, 93), _row((92, 93)))
+    assert hot not in cache             # released: evictable again
+
+
+def test_all_pinned_overflows_rather_than_evict():
+    cache = PrefixCache(grid=1, max_nodes=2)
+    for k in ((1,), (2,)):
+        cache.insert(k, _row(k))
+        cache.acquire(k)
+    assert cache.insert((3,), _row((3,)))
+    assert len(cache) == 3              # temporary overflow, no eviction
+    assert cache.stats()["evictions"] == 0
+
+
+# ==========================================================================
+# longest-match maximality
+# ==========================================================================
+
+@settings(max_examples=60, deadline=None)
+@given(grid=st.integers(1, 4), seed=st.integers(0, 9),
+       plen=st.integers(2, 40), holes=st.integers(0, 7))
+def test_lookup_longest_match_is_maximal(grid, seed, plen, holes):
+    """lookup == max over cached boundary prefixes strictly shorter than
+    the query — computed here by brute force over every boundary."""
+    cache = PrefixCache(grid=grid, max_nodes=256)
+    prompt = _prompt(seed, plen)
+    cached = []
+    for i, key in enumerate(_boundaries(prompt, grid)):
+        if holes and i % (holes + 1) == holes:
+            continue                     # leave gaps: maximality != density
+        cache.insert(key, _row(key))
+        cached.append(len(key))
+    want = max((p for p in cached if p < len(prompt)), default=0)
+    p, node = cache.lookup(prompt)
+    assert p == want
+    if want:
+        assert node.key == prompt[:want]
+    else:
+        assert node is None
+
+
+def test_lookup_never_returns_full_query():
+    """Cap at len-1: even a fully cached prompt leaves >= 1 token to feed
+    (the final chunk must emit first-token logits)."""
+    cache = PrefixCache(grid=2, max_nodes=8)
+    prompt = (1, 2, 3, 4)
+    cache.insert(prompt, _row(prompt))
+    cache.insert(prompt[:2], _row(prompt[:2]))
+    p, node = cache.lookup(prompt)
+    assert p == 2 and node.key == prompt[:2]
+
+
+# ==========================================================================
+# construction / key validation / corpus view
+# ==========================================================================
+
+def test_key_and_construction_validation():
+    with pytest.raises(ValueError):
+        PrefixCache(grid=0)
+    with pytest.raises(ValueError):
+        PrefixCache(grid=4, max_nodes=0)
+    cache = PrefixCache(grid=4, max_nodes=8)
+    with pytest.raises(ValueError):
+        cache.insert((), _row(()))           # empty
+    with pytest.raises(ValueError):
+        cache.insert((1, 2, 3), _row((1,)))  # off-grid
+
+
+def test_insert_first_writer_wins():
+    cache = PrefixCache(grid=2, max_nodes=8)
+    key = (5, 6)
+    assert cache.insert(key, _row(key))
+    assert not cache.insert(key, ("other", "row"))
+    _, node = cache.lookup(key + (9,))
+    assert node.row == _row(key)             # original row retained
+
+
+def test_sequences_returns_leaves_only():
+    cache = PrefixCache(grid=2, max_nodes=16)
+    for key in ((1, 2), (1, 2, 3, 4), (7, 8)):
+        cache.insert(key, _row(key))
+    assert cache.sequences() == [(1, 2, 3, 4), (7, 8)]
