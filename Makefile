@@ -4,7 +4,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify test test-fast test-chaos test-serving test-tp test-prefix \
-	docs-check docs-links bench bench-collectives bench-serving
+	test-obs docs-check docs-links bench bench-collectives bench-serving
 
 verify:
 	$(PY) -m pytest -x -q
@@ -32,6 +32,11 @@ test-serving:
 # bit-identity matrix that test-fast deselects
 test-prefix:
 	$(PY) -m pytest tests/test_prefix_props.py tests/test_prefix_caching.py -q
+
+# observability suite: tracer/histogram/fit units, the traced-vs-untraced
+# bit-identity matrix, and the slow-marked 8-device probe test
+test-obs:
+	$(PY) -m pytest tests/test_obs.py -q
 
 # tensor-parallel suite: the fast TP unit/property tests plus the
 # slow-marked 8-virtual-device stream-identity matrix (subprocesses set

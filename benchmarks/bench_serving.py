@@ -26,6 +26,34 @@ from __future__ import annotations
 
 import jax
 
+# Per-row artifact schema: v2 rows carry ``schema_version`` and ``obs``
+# (whether the collective probe was installed — instrumented wall clocks
+# are not comparable to clean ones). The row-merge refuses to mix
+# provenances; bump this when row semantics change again.
+ROW_SCHEMA_VERSION = 2
+
+
+def merge_rows(prior, fresh_rows, obs_on):
+    """Merge prior artifact rows with a fresh run's rows.
+
+    Fresh rows always win on name collisions; surviving prior rows must
+    match the fresh run's provenance (schema version AND obs on/off) —
+    a probe-instrumented wall clock and a clean one are not comparable,
+    and silently merging them is how dashboards lie. Returns
+    ``(merged, rejected_count)``.
+    """
+    fresh = {r["name"] for r in fresh_rows}
+    keep, rejected = [], 0
+    for r in prior:
+        if r["name"] in fresh:
+            continue
+        if (r.get("schema_version") != ROW_SCHEMA_VERSION
+                or r.get("obs", False) != obs_on):
+            rejected += 1
+            continue
+        keep.append(r)
+    return keep + list(fresh_rows), rejected
+
 N_REQUESTS = 16
 N_SLOTS = 8
 GAP = 1           # ticks between arrivals
@@ -638,14 +666,21 @@ def main(argv=None) -> int:
                     help=argparse.SUPPRESS)  # subprocess half of --tp
     ap.add_argument("--artifact", default="BENCH_serving.json",
                     help="JSON artifact path ('' disables)")
+    ap.add_argument("--obs", action="store_true",
+                    help="run with the collective timing probe installed "
+                         "(repro.obs): wall-clock rows then include probe "
+                         "overhead, so obs and non-obs rows are never "
+                         "merged into one artifact")
     args = ap.parse_args(argv)
 
     rows = []
+    obs_on = bool(args.obs)
 
     def csv_out(name, value, derived=""):
         print(f"{name},{value},{derived}")
         rows.append({"suite": "serving", "name": name, "value": value,
-                     "derived": derived})
+                     "derived": derived,
+                     "schema_version": ROW_SCHEMA_VERSION, "obs": obs_on})
 
     fn = run
     single = True
@@ -665,10 +700,20 @@ def main(argv=None) -> int:
         fn = run_tp_inner
     else:
         single = False
-    fn(csv_out)
+    if obs_on:
+        from repro.obs import probing
+        with probing() as probe:
+            fn(csv_out)
+        csv_out("serving_obs_probe_samples", str(probe.n_seen),
+                "collective timing samples recorded by the obs probe")
+    else:
+        fn(csv_out)
     if args.artifact:
         # a single-scenario run refreshes its own rows in an existing
-        # artifact instead of clobbering the rest of the suite
+        # artifact instead of clobbering the rest of the suite — but only
+        # rows of the SAME provenance (schema version + obs on/off) are
+        # kept: a probe-instrumented wall clock and a clean one are not
+        # comparable, and silently merging them is how dashboards lie.
         prior = []
         if single:
             try:
@@ -676,8 +721,11 @@ def main(argv=None) -> int:
                     prior = json.load(f).get("rows", [])
             except (OSError, ValueError):
                 prior = []
-        fresh = {r["name"] for r in rows}
-        merged = [r for r in prior if r["name"] not in fresh] + rows
+        merged, rejected = merge_rows(prior, rows, obs_on)
+        if rejected:
+            print(f"# dropped {rejected} prior row(s) of different "
+                  f"provenance (schema_version != {ROW_SCHEMA_VERSION} or "
+                  f"obs != {obs_on}) instead of merging")
         doc = {"schema": 1, "suites_run": ["serving"], "failures": [],
                "rows": merged}
         with open(args.artifact, "w") as f:

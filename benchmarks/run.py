@@ -46,8 +46,15 @@ def main(argv=None) -> int:
 
     def csv_out(name, value, derived=""):
         print(f"{name},{value},{derived}")
-        rows.append({"suite": current_suite[0], "name": name,
-                     "value": value, "derived": derived})
+        row = {"suite": current_suite[0], "name": name,
+               "value": value, "derived": derived}
+        if current_suite[0] == "serving":
+            # same provenance stamp as bench_serving's standalone entry,
+            # so a later single-scenario refresh can merge into this
+            # artifact; this path never installs the obs probe
+            row["schema_version"] = bench_serving.ROW_SCHEMA_VERSION
+            row["obs"] = False
+        rows.append(row)
 
     for name in chosen:
         print(f"# ---- {name} ----")

@@ -26,6 +26,7 @@ from repro.core.dptree import (_COMMUTATIVE_OPS, dptree_allreduce,
                                hier_allreduce, redbcast_allreduce,
                                ring_allreduce, sptree_allreduce)
 from repro.core.topology import build_dual_tree
+from repro.obs import probe as _obs_probe
 
 __all__ = [
     "CollectiveConfig",
@@ -263,6 +264,14 @@ def all_reduce(x: jax.Array, axis_name: str, p: int,
           else _nblocks(config.num_blocks, p, nbytes, config.comm_model,
                         algo, hier_spec,
                         "bf16" if hier_compress else None))
+    probe = _obs_probe.active()
+    if probe is not None and algo != "hier":
+        # Trace-time note: this Python body runs once per compilation, so
+        # the sample records WHAT was picked (algorithm, blocks, shape) —
+        # wall time comes from host-boundary timed samples (repro.obs.probe).
+        # hier defers to hier_allreduce's own note (resolved level spec).
+        probe.note(algo, p, nbytes, nb, dtype=str(flat.dtype),
+                   kind="trace", levels=hier_spec, axis=axis_name)
     if algo == "psum":
         # route through the matching primitive: psum with op=max would
         # silently sum.

@@ -452,6 +452,15 @@ def hier_allreduce(x: jax.Array, axis_name: str, p: int, *,
         return x
     h = htopo or build_hierarchy(p, group_size)
     assert h.p == p, (h.p, p)
+    from repro.obs import probe as _obs_probe
+    _probe = _obs_probe.active()
+    if _probe is not None and h.levels:
+        # Trace-time note for direct hier calls; all_reduce's hier branch
+        # defers to this one so the sample is never double-counted. (The
+        # degenerate no-level shape is a flat dptree; all_reduce notes it.)
+        _probe.note("hier", p, x.size * x.dtype.itemsize,
+                    num_blocks, dtype=str(x.dtype), kind="trace",
+                    levels=tuple(h.levels), axis=axis_name)
     if not h.levels:  # one rank per group: plain flat dptree over all ranks
         nb = max(1, min(int(num_blocks), x.shape[0]))
         return _tree_allreduce(x, axis_name, h.inter_topo, nb, op, None,

@@ -110,6 +110,64 @@ def synthetic_workload(n: int, vocab: int, *, gap: int = 2, seed: int = 0,
     ]
 
 
+def _obs_build(args):
+    """Observability sinks from the CLI flags: ``(tracer, metrics_kwargs)``.
+    One Tracer serves the whole run (continuous or chaos); metrics attach
+    only when ``--metrics-every`` asks for live snapshots."""
+    from repro.obs import StreamingMetrics, Tracer
+    tracer = Tracer() if args.trace_out else None
+    kwargs = {}
+    if args.metrics_every > 0:
+        kwargs["metrics"] = StreamingMetrics()
+        kwargs["metrics_every"] = args.metrics_every
+        kwargs["metrics_sink"] = (
+            lambda tick, s: print(
+                f"[metrics t={tick}] "
+                f"ttft p50/p99 {s['ttft_ticks_p50']:.0f}/"
+                f"{s['ttft_ticks_p99']:.0f} ticks "
+                f"({s['ttft_n']:.0f} obs), "
+                f"latency p50/p99 {s['latency_ticks_p50']:.0f}/"
+                f"{s['latency_ticks_p99']:.0f} ticks "
+                f"({s['latency_n']:.0f} obs)"))
+    return tracer, kwargs
+
+
+def _obs_finish(args, tracer, probe=None):
+    """Write the trace file(s) and print the probe's fit/residual summary."""
+    if probe is not None and len(probe):
+        from repro.obs import fit_alpha_beta, residual_report
+        timed = probe.timed()
+        print(f"[probe] {probe.n_seen} samples "
+              f"({len(timed)} timed, {len(probe.traced())} trace-time)")
+        rows = residual_report(timed, probe.model)
+        if rows:
+            worst = max(rows, key=lambda r: r["rel_err"])
+            print(f"[probe] vs {probe.model.name}: worst residual "
+                  f"{worst['rel_err']:.1%} at p={worst['p']} "
+                  f"{worst['nbytes']}B ({worst['method']})")
+        try:
+            fr = fit_alpha_beta(timed)
+            print(f"[probe] fitted alpha={fr.alpha:.3e}s "
+                  f"beta={fr.beta:.3e}s/B over {fr.n_samples} samples "
+                  f"(max rel err {fr.max_rel_err:.1%})")
+        except ValueError as e:
+            print(f"[probe] no fit: {e}")
+        if tracer is not None:
+            from repro.obs import export_residuals
+            export_residuals(tracer, timed, model=probe.model)
+    if tracer is not None:
+        path = args.trace_out
+        if args.trace_format in ("chrome", "both"):
+            tracer.to_chrome(path)
+            print(f"[trace] {len(tracer)} events -> {path} "
+                  f"(chrome://tracing / Perfetto"
+                  f"{', %d dropped' % tracer.dropped if tracer.dropped else ''})")
+        if args.trace_format in ("jsonl", "both"):
+            jl = path if args.trace_format == "jsonl" else path + ".jsonl"
+            n = tracer.to_jsonl(jl)
+            print(f"[trace] {n} events -> {jl} (jsonl)")
+
+
 def serve_continuous(args):
     """Drive the continuous-batching engine on a synthetic workload."""
     from repro.serving import (DraftModelDrafter, PriorityClass,
@@ -134,6 +192,7 @@ def serve_continuous(args):
                                     max_len=args.cache_len)
     # per-tick stats cross the replica axis on the b=1 dual-root tree
     # (host-side sum on a 1-wide axis)
+    tracer, obs_kwargs = _obs_build(args)
     engine = ServingEngine(cfg, pcfg, mesh, params, n_slots=args.slots,
                            max_len=args.cache_len,
                            prefill_chunk=args.prefill_chunk,
@@ -141,7 +200,8 @@ def serve_continuous(args):
                            drafter=drafter,
                            prefix_cache=args.prefix_cache,
                            prefix_cache_nodes=(args.prefix_cache_nodes
-                                               or 256))
+                                               or 256),
+                           tracer=tracer, **obs_kwargs)
     sampling = None
     if args.temperature > 0:
         sampling = SamplingParams(temperature=args.temperature,
@@ -163,7 +223,17 @@ def serve_continuous(args):
                               and not args.draft_model,
                               slo=slo, shared_prefix=args.shared_prefix)
     policy = make_policy(args.policy) if args.policy != "fifo" else None
-    report = engine.run(reqs, static=args.static, policy=policy)
+    probe = None
+    if args.probe:
+        from repro.obs import CollectiveProbe, install
+        probe = install(CollectiveProbe())
+    try:
+        report = engine.run(reqs, static=args.static, policy=policy)
+    finally:
+        if probe is not None:
+            from repro.obs import uninstall
+            uninstall()
+    _obs_finish(args, tracer, probe)
     spec_note = (f", {report['accepted_tokens']}/"
                  f"{report['drafted_tokens']} drafts accepted"
                  if report["drafted_tokens"] else "")
@@ -219,13 +289,32 @@ def serve_chaos(args):
                                   sampling=sampling)
 
     base = engine.run(workload())
+    # observability attaches AFTER the baseline: the divergence check
+    # compares the fleet against the undisturbed run, and the trace should
+    # cover the chaos run (failovers, quarantines), not the reference.
+    # Late attach is supported — the engine reads these attrs every tick.
+    tracer, obs_kwargs = _obs_build(args)
+    engine.tracer = tracer
+    engine.metrics = obs_kwargs.get("metrics")
+    engine.metrics_every = obs_kwargs.get("metrics_every", 0)
+    engine.metrics_sink = obs_kwargs.get("metrics_sink")
     plan = FaultPlan.seeded(args.chaos_seed, n_replicas=args.replicas,
                             horizon=max(2, base["ticks"]))
     runner = FleetRunner(engine, args.replicas, plan=plan,
                          timeout_s=args.heartbeat_timeout,
                          misses=args.heartbeat_misses,
                          rejoin_backoff_s=args.rejoin_backoff)
-    report = runner.run(workload())
+    probe = None
+    if args.probe:
+        from repro.obs import CollectiveProbe, install
+        probe = install(CollectiveProbe())
+    try:
+        report = runner.run(workload())
+    finally:
+        if probe is not None:
+            from repro.obs import uninstall
+            uninstall()
+    _obs_finish(args, tracer, probe)
     diverged = sum(report["tokens"][rid] != base["tokens"][rid]
                    for rid in base["tokens"])
     faults = ", ".join(f"t{f.tick}:{f.kind}@r{f.replica}" for f in plan) \
@@ -368,6 +457,29 @@ def main(argv=None):
                          "every synthetic request (>= 0; the workload "
                          "shape --prefix-cache accelerates — i.i.d. "
                          "prompts share nothing)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a structured trace of the run (admissions, "
+                         "prefill chunks, commits, preemptions, failovers "
+                         "...) to PATH; tracing is pure observation — token "
+                         "streams are bit-identical with it on or off "
+                         "(docs/observability.md; implies --continuous)")
+    ap.add_argument("--trace-format", choices=("chrome", "jsonl", "both"),
+                    default="chrome",
+                    help="--trace-out format: 'chrome' (chrome://tracing / "
+                         "Perfetto JSON, the default), 'jsonl' (one event "
+                         "per line), or 'both' (chrome at PATH, jsonl at "
+                         "PATH.jsonl)")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="print live fleet-wide TTFT/latency percentiles "
+                         "every N ticks — fixed-bucket histograms riding "
+                         "the SAME b=1 stats reduction as the counters "
+                         "(0 = off; implies --continuous)")
+    ap.add_argument("--probe", action="store_true",
+                    help="record (p, nbytes, method, blocks) -> wall-time "
+                         "samples from every collective in the run and "
+                         "print the alpha-beta fit + predicted-vs-measured "
+                         "residuals (docs/observability.md; implies "
+                         "--continuous)")
     ap.add_argument("--autotune-cache", default=None, metavar="PATH",
                     help="per-deployment autotune cache file; overrides "
                          "REPRO_AUTOTUNE_CACHE and the XDG default (what "
@@ -397,7 +509,9 @@ def main(argv=None):
         return serve_chaos(args)
     if args.continuous or args.static or args.speculate or args.draft_model \
             or args.policy != "fifo" or args.priority is not None \
-            or args.deadline_ticks is not None or args.prefix_cache:
+            or args.deadline_ticks is not None or args.prefix_cache \
+            or args.trace_out is not None or args.metrics_every > 0 \
+            or args.probe:
         return serve_continuous(args)
     return serve_loop(args)
 
@@ -444,6 +558,11 @@ def _validate_args(ap, args) -> None:
                      f"got {args.prefix_cache_nodes}")
     if args.shared_prefix < 0:
         ap.error(f"--shared-prefix must be >= 0, got {args.shared_prefix}")
+    if args.metrics_every < 0:
+        ap.error(f"--metrics-every must be >= 0, got {args.metrics_every}")
+    if args.trace_out is None and args.trace_format != "chrome":
+        ap.error("--trace-format requires --trace-out (there is no trace "
+                 "file to format without it)")
     if args.prefix_cache and args.chaos_seed is not None:
         ap.error("--prefix-cache is incompatible with --chaos-seed: the "
                  "trie is per-session state and the chaos baseline/fleet "

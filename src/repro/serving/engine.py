@@ -62,8 +62,9 @@ from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import SlotScheduler
 from repro.serving.slo import slo_report
 from repro.serving.speculative import (AdaptiveDraftController, NgramDrafter,
-                                       SpecParams)
-from repro.serving.telemetry import TelemetryLog, stats_vector
+                                       SpecParams, drafter_label)
+from repro.serving.telemetry import (STATS_FIELDS, TelemetryLog,
+                                     stats_vector)
 
 
 def _pow2_at_least(n: int, floor: int) -> int:
@@ -128,7 +129,9 @@ class ServingEngine:
                  min_prefill_bucket: int = 16, prefill_chunk: int | None = None,
                  stats_reducer=None, drafter=None,
                  draft_headroom: int | None = None,
-                 prefix_cache: bool = False, prefix_cache_nodes: int = 256):
+                 prefix_cache: bool = False, prefix_cache_nodes: int = 256,
+                 tracer=None, metrics=None, metrics_every: int = 0,
+                 metrics_sink=None):
         if not tf.supports_slot_serving(cfg):
             raise ValueError(
                 f"{cfg.name}: slot serving needs input_mode='tokens' and no "
@@ -192,6 +195,21 @@ class ServingEngine:
         self.caches = None            # allocated per run
         self.stats_reducer = stats_reducer
         self.drafter = drafter
+        # observability (repro.obs, docs/observability.md) — all optional,
+        # all MUTABLE attrs read dynamically each tick, so a tracer or
+        # metrics object can attach mid-run (e.g. after an untraced
+        # baseline) and every hook stays one `is None` check when off.
+        # ``tracer``        obs.Tracer event sink (pure observation);
+        # ``metrics``       obs.StreamingMetrics — TTFT/latency histogram
+        #                   increments appended to the per-tick stats row
+        #                   (same b=1 reduction, wider payload);
+        # ``metrics_every`` emit a live snapshot every N ticks (0 = off)
+        #                   to ``metrics_sink(tick, snapshot)`` and/or the
+        #                   tracer as a "metrics" event.
+        self.tracer = tracer
+        self.metrics = metrics
+        self.metrics_every = int(metrics_every)
+        self.metrics_sink = metrics_sink
         self._verify_steps: dict = {}   # draft budget K -> jitted verify
         # cross-request prefix caching: one jitted row snapshot (extract)
         # and one jitted copy-on-admit (adopt), slot traced so slot churn
@@ -370,6 +388,15 @@ class EngineSession:
         self.log = TelemetryLog(engine.stats_reducer)
         self.now = 0
         self._t0 = time.perf_counter()
+        # observability: which replica this session's trace events carry
+        # (the fleet runner stamps its replica id here); per-tick TTFT /
+        # latency observations feed the streaming histograms when
+        # ``engine.metrics`` is attached.
+        self.trace_replica = 0
+        self._tick_ttfts: list = []
+        self._tick_lats: list = []
+        if self.prefix is not None:
+            self.prefix.on_event = self._prefix_event
         if self.prefix is not None and isinstance(engine.drafter,
                                                   NgramDrafter) \
                 and engine.drafter.corpus is None:
@@ -409,9 +436,24 @@ class EngineSession:
         """Free a finished request's slot (and its drafter/controller)."""
         self.sched.release(slot, self.now)
         freed[slot] = True
+        if req.latency is not None:
+            self._tick_lats.append(req.latency)
+        tr = self.engine.tracer
+        if tr is not None:
+            tr.event("commit", self.now, rid=req.rid,
+                     replica=self.trace_replica, slot=int(slot),
+                     n_tokens=len(req.tokens), done=True,
+                     latency_ticks=req.latency)
         if req.spec is not None:
             self.engine.drafter.release(slot)
             self._ctrls.pop(req.rid, None)
+
+    def _prefix_event(self, name: str, **attrs) -> None:
+        """Prefix-trie detail events (insert/evict/hit) forwarded to the
+        tracer; one `is None` check when tracing is off."""
+        tr = self.engine.tracer
+        if tr is not None:
+            tr.event(name, self.now, replica=self.trace_replica, **attrs)
 
     def _unpin(self, slot: int) -> None:
         """Drop a slot's prefix-trie pin (if any) and its history note —
@@ -441,6 +483,16 @@ class EngineSession:
         prefix_hits = 0
         prefix_reused = 0
         freed = np.zeros(eng.n_slots, bool)
+        # observability: read the mutable sinks ONCE per tick (late attach
+        # is the supported idiom — see ServingEngine), and hand the
+        # scheduler the tracer so shed/preempt events are emitted at the
+        # decision site. Pure observation: every hook below records values
+        # the tick computed anyway and feeds nothing back.
+        tr = eng.tracer
+        sched.tracer = tr
+        sched.trace_replica = self.trace_replica
+        self._tick_ttfts = []
+        self._tick_lats = []
 
         # --- SLO hooks: shed hopeless queued work, then evict slots the
         # policy wants for waiting higher-priority requests. Both are
@@ -486,6 +538,12 @@ class EngineSession:
                 self._resume_last[slot] = int(req.tokens[-1])
                 resumed += len(req.tokens)
                 req.resumed_tokens += len(req.tokens)
+                if tr is not None:
+                    tr.event("resume", now, rid=req.rid,
+                             replica=self.trace_replica, slot=int(slot),
+                             journal_tokens=len(req.tokens),
+                             preemptions=req.preemptions,
+                             failovers=req.failovers)
             start = 0
             if self.prefix is not None:
                 # prefix adoption AFTER history normalization: a resumed
@@ -505,8 +563,18 @@ class EngineSession:
                     req.prefix_reused += p
                     prefix_hits += 1
                     prefix_reused += p
+                    if tr is not None:
+                        tr.event("prefix_adopt", now, rid=req.rid,
+                                 replica=self.trace_replica,
+                                 slot=int(slot), tokens_reused=p)
                 self._prefix_hist[slot] = tuple(history)
             self.pending_chunks[slot] = eng._chunk_plan(history, start=start)
+            if tr is not None:
+                tr.event("admit", now, rid=req.rid,
+                         replica=self.trace_replica, slot=int(slot),
+                         prompt_len=len(req.prompt),
+                         chunks=len(self.pending_chunks[slot]),
+                         resumed=bool(req.tokens))
             sampling.set_slot(samp, slot, req.sampling)
             if req.spec is not None:
                 self._ctrls[req.rid] = AdaptiveDraftController(req.spec)
@@ -538,6 +606,11 @@ class EngineSession:
                               if sampled_req else None))
             req.prefilled += len(chunk)
             chunks_fed += 1
+            if tr is not None:
+                tr.event("prefill_chunk", now, rid=req.rid,
+                         replica=self.trace_replica, slot=int(slot),
+                         chunk_tokens=len(chunk), final=final,
+                         prefilled=req.prefilled)
             if self.prefix is not None:
                 # snapshot the slot row at every chunk-grid boundary: the
                 # row there is a pure function of history[:p] + the grid
@@ -565,6 +638,12 @@ class EngineSession:
                     tok = int(np.asarray(tok))
                     req.tokens.append(tok)
                     req.t_first = now
+                    self._tick_ttfts.append(req.ttft)
+                    if tr is not None:
+                        tr.event("commit", now, rid=req.rid,
+                                 replica=self.trace_replica, slot=int(slot),
+                                 n_tokens=1, first_token=True,
+                                 ttft_ticks=req.ttft)
                     if req.deadline is not None \
                             and not req.deadline_counted and now > req.deadline:
                         req.deadline_counted = True
@@ -594,6 +673,11 @@ class EngineSession:
                 d = eng.drafter.propose(slot, req, k_eff)[:k_eff]
                 if d:
                     drafts[slot] = [int(t) for t in d]
+                if tr is not None:
+                    tr.event("draft", now, rid=req.rid,
+                             replica=self.trace_replica, slot=int(slot),
+                             k_eff=int(k_eff), proposed=len(d),
+                             drafter=drafter_label(eng.drafter))
 
         if decodable:
             active = np.zeros(eng.n_slots, bool)
@@ -643,6 +727,11 @@ class EngineSession:
                     accepted += n - 1
                     if req.spec is not None:
                         self._ctrls[req.rid].update(nd, n - 1)
+                    if tr is not None:
+                        tr.event("verify", now, rid=req.rid,
+                                 replica=self.trace_replica, slot=int(slot),
+                                 n_draft=nd, accepted=n - 1,
+                                 committed=len(emit))
                     if req.done:
                         self._release(slot, req, freed)
             else:
@@ -652,6 +741,9 @@ class EngineSession:
                     self.caches, jnp.asarray(active), samp_in)
                 toks = np.asarray(toks).astype(np.int32)
                 self._guard(decodable, [toks[s] for s in decodable])
+                if tr is not None:
+                    tr.event("decode", now, replica=self.trace_replica,
+                             n_active=len(decodable))
                 for slot, req in decodable.items():
                     req.tokens.append(int(toks[slot]))
                     self.last[slot] = toks[slot]
@@ -659,6 +751,10 @@ class EngineSession:
                     if req.sampling is not None \
                             and not req.sampling.greedy:
                         sampled_tokens += 1
+                    if tr is not None:
+                        tr.event("commit", now, rid=req.rid,
+                                 replica=self.trace_replica, slot=int(slot),
+                                 n_tokens=1)
                     if req.done:
                         self._release(slot, req, freed)
 
@@ -687,7 +783,24 @@ class EngineSession:
             "prefix_hits": prefix_hits,
             "prefix_tokens_reused": prefix_reused,
         })
+        metrics = eng.metrics
+        if metrics is not None:
+            # histogram increments ride the SAME b=1 stats reduction — the
+            # row just gets a fixed-width tail (the reducer is width-
+            # agnostic); counts land in the histograms only via the
+            # reduced vector, so single-engine and fleet runs agree.
+            vec = vec + metrics.row(self._tick_ttfts, self._tick_lats)
         self.log.step(now, vec)
+        if metrics is not None:
+            metrics.absorb(self.log.last_reduced[len(STATS_FIELDS):])
+            every = eng.metrics_every
+            if every > 0 and (now + 1) % every == 0:
+                snap = metrics.snapshot()
+                if eng.metrics_sink is not None:
+                    eng.metrics_sink(now, snap)
+                if tr is not None:
+                    tr.event("metrics", now, replica=self.trace_replica,
+                             **snap)
         self.now += 1
         return vec
 
@@ -729,4 +842,6 @@ class EngineSession:
         report["policy"] = sched.policy.name
         report["tp"] = self.engine.tp_shards
         report["slo"] = slo_report(sched.finished + sched.shed_requests)
+        if self.engine.metrics is not None:
+            report["live_metrics"] = self.engine.metrics.snapshot()
         return report

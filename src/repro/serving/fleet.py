@@ -255,6 +255,8 @@ class FleetRunner:
             clock=lambda: float(self.now))
         self.injector = FaultInjector(plan) if plan is not None else None
         self.sessions = {r: engine.start() for r in range(n_replicas)}
+        for r, s in self.sessions.items():
+            s.trace_replica = r     # trace events carry the replica id
         self.finished: list = []
         self._harvested = {r: 0 for r in range(n_replicas)}
         self.log = TelemetryLog()   # host-side sum over replica rows
@@ -296,6 +298,24 @@ class FleetRunner:
                                           for req in moved]))
             for req in moved:
                 req.failovers += 1
+        tr = self.engine.tracer
+        if tr is not None:
+            # one engine-lane event per dead/quarantined replica, plus one
+            # per orphan on the replica that inherited it (placement has
+            # already moved), carrying the journal the exact resume will
+            # replay.
+            for d in list(plan.dead) + list(plan.quarantined):
+                tr.event("failover", self.now, replica=d,
+                         quarantined=d in plan.quarantined,
+                         requeued=len(plan.requeued),
+                         new_p=plan.elastic.new_p)
+            for r in self.fleet.alive:
+                for req in self.fleet._placement[r]:
+                    if req.rid in plan.requeued:
+                        tr.event("failover", self.now, rid=req.rid,
+                                 replica=r,
+                                 journal_tokens=len(req.tokens),
+                                 new_p=plan.elastic.new_p)
 
     def _close_recovered(self) -> None:
         """A failover event is recovered when every orphan has committed a
@@ -313,6 +333,7 @@ class FleetRunner:
         """Give a rejoined replica a fresh session and steal queued work
         from the most-loaded survivor (half its queue, FIFO preserved)."""
         self.sessions[replica] = self.engine.start()
+        self.sessions[replica].trace_replica = replica
         self._harvested[replica] = 0
         self._rejoins += 1
         donors = [r for r in self.fleet.alive if r != replica

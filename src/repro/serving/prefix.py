@@ -65,7 +65,7 @@ class PrefixNode:
 class PrefixCache:
     """Refcounted LRU trie of prefill-chunk-boundary cache rows."""
 
-    def __init__(self, grid: int, max_nodes: int = 256):
+    def __init__(self, grid: int, max_nodes: int = 256, on_event=None):
         if grid < 1:
             raise ValueError(f"grid must be >= 1, got {grid}")
         if max_nodes < 1:
@@ -74,6 +74,10 @@ class PrefixCache:
         self.max_nodes = int(max_nodes)
         self._nodes: dict = {}          # exact token tuple -> PrefixNode
         self._clock = 0
+        # observability: ``on_event(name, **attrs)`` callback for trie
+        # detail events ("prefix_hit"/"prefix_insert"/"prefix_evict");
+        # the engine session wires it to the tracer. None = off.
+        self.on_event = on_event
         # counters (cumulative; the engine derives per-tick deltas)
         self.hits = 0
         self.misses = 0
@@ -110,6 +114,9 @@ class PrefixCache:
                 node.stamp = self._clock
                 self.hits += 1
                 self.tokens_reused += p
+                if self.on_event is not None:
+                    self.on_event("prefix_hit", prefix_len=p,
+                                  nodes=len(self._nodes))
                 return p, node
             p -= self.grid
         self.misses += 1
@@ -140,6 +147,9 @@ class PrefixCache:
                 break
         self._nodes[key] = PrefixNode(key=key, row=row, stamp=self._clock)
         self.insertions += 1
+        if self.on_event is not None:
+            self.on_event("prefix_insert", prefix_len=len(key),
+                          nodes=len(self._nodes))
         return True
 
     def acquire(self, key) -> None:
@@ -169,6 +179,9 @@ class PrefixCache:
             return False
         del self._nodes[victim.key]
         self.evictions += 1
+        if self.on_event is not None:
+            self.on_event("prefix_evict", prefix_len=len(victim.key),
+                          nodes=len(self._nodes))
         return True
 
     # ----------------------------------------------------- drafter corpus

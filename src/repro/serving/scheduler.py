@@ -48,6 +48,11 @@ class SlotScheduler:
         self._slots: list = [None] * n_slots     # slot -> Request | None
         self._finished: list = []
         self._shed: list = []
+        # observability (repro.obs): the engine session re-stamps these
+        # every tick so shed/preempt decisions trace at the decision site;
+        # None = tracing off (the default, one is-None check per event).
+        self.tracer = None
+        self.trace_replica = 0
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request) -> None:
@@ -178,6 +183,11 @@ class SlotScheduler:
             req.t_done = now
             req.slot = None
             self._shed.append(req)
+            if self.tracer is not None:
+                self.tracer.event("shed", now, rid=req.rid,
+                                  replica=self.trace_replica,
+                                  waited_ticks=now - req.arrival,
+                                  deadline=req.deadline)
         return victims
 
     def plan_preemptions(self, now: int) -> list:
@@ -204,6 +214,11 @@ class SlotScheduler:
             raise ValueError(f"slot {slot} is already free")
         self._slots[slot] = None
         req.preemptions += 1
+        if self.tracer is not None:
+            self.tracer.event("preempt", now, rid=req.rid,
+                              replica=self.trace_replica, slot=int(slot),
+                              journal_tokens=len(req.tokens),
+                              preemptions=req.preemptions)
         self.requeue_front([req])
         return req
 

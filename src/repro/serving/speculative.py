@@ -113,6 +113,12 @@ class AdaptiveDraftController:
     def current_k(self) -> int:
         return self.k
 
+    def snapshot(self) -> dict:
+        """JSON-safe controller state (trace/metrics attrs): current k,
+        the acceptance EWMA, and lifetime drafted/accepted totals."""
+        return {"k": int(self.k), "rate": float(self.rate),
+                "drafted": int(self.drafted), "accepted": int(self.accepted)}
+
     def update(self, n_draft: int, n_accept: int) -> int:
         """Record one verify tick's outcome; returns the next tick's k."""
         self.drafted += int(n_draft)
@@ -126,6 +132,19 @@ class AdaptiveDraftController:
         elif self.rate > self.spec.high:
             self.k = min(self.spec.draft_k, self.k + 1)
         return self.k
+
+
+def drafter_label(drafter) -> str:
+    """Short stable label for trace events: which drafting strategy a
+    draft proposal came from (``"ngram"``, ``"draft_model"``, ``"none"``,
+    or the class name for custom drafters)."""
+    if drafter is None:
+        return "none"
+    if isinstance(drafter, NgramDrafter):
+        return "ngram"
+    if isinstance(drafter, DraftModelDrafter):
+        return "draft_model"
+    return type(drafter).__name__
 
 
 class Drafter:

@@ -21,7 +21,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.collectives import CollectiveConfig, all_reduce
+from repro.core.collectives import CollectiveConfig, _pick, all_reduce
+from repro.obs import probe as _obs_probe
 
 # field order of the per-tick stats vector (summed across replicas):
 #   queue_depth    — arrived-but-unadmitted requests
@@ -138,7 +139,28 @@ def make_stats_reducer(mesh, axis: str = "data",
             raise ValueError(
                 f"stats rows {arr.shape} do not match the {p}-way "
                 f"'{axis}' replica axis (want 1 or {p} rows)")
-        return np.asarray(fn(arr))
+        probe = _obs_probe.active()
+        if probe is None:
+            return np.asarray(fn(arr))
+        # Timed sample at the host boundary: the jitted body only runs
+        # Python at trace time, so wall clocks must bracket the whole
+        # dispatch+execute here (block_until_ready pins completion). The
+        # method/blocks are re-resolved host-side through the same _pick
+        # the traced code used, so the sample labels what actually ran.
+        import time
+
+        import jax
+        nbytes = arr.shape[1] * 4
+        algo, nb, hier_spec, _ = _pick(collective.method, p, nbytes,
+                                       collective, np.dtype(np.float32),
+                                       axis)
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(arr))
+        wall = time.perf_counter() - t0
+        probe.note(algo, p, nbytes,
+                   nb if nb is not None else collective.num_blocks or 1,
+                   kind="timed", wall_s=wall, levels=hier_spec, axis=axis)
+        return np.asarray(out)
 
     return reduce
 
@@ -172,12 +194,17 @@ class TelemetryLog:
         self._reduce = reducer or (
             lambda stacked: np.asarray(stacked, np.float32).sum(0))
         self.steps: list = []
+        # Full reduced vector of the latest tick, INCLUDING any payload
+        # appended past STATS_FIELDS (e.g. the obs histogram tail, which
+        # StepStats deliberately ignores). None before the first tick.
+        self.last_reduced = None
 
     def step(self, tick: int, local_vec) -> StepStats:
         """Record one tick. ``local_vec`` is this replica's row (k,) or a
         stacked (p, k) matrix of every replica's row (fleet simulation)."""
         vec = np.atleast_2d(np.asarray(local_vec, np.float32))
         red = self._reduce(vec)
+        self.last_reduced = np.asarray(red)
         s = StepStats(tick, *(float(x) for x in red[:len(STATS_FIELDS)]))
         self.steps.append(s)
         return s
@@ -197,10 +224,18 @@ class TelemetryLog:
             "total_tokens": total,
             "wall_s": float(wall_s),
             "tok_s": total / wall_s if wall_s > 0 else float("nan"),
+            # tok_s is NaN exactly when no wall clock was provided (tick-
+            # driven runs); the note makes that path explicit for report
+            # consumers instead of a bare NaN.
+            "tok_s_note": (None if wall_s > 0
+                           else "wall_s <= 0: tok_s undefined"),
             "ticks": int(ticks),
             "ttft_ticks_mean": float(np.mean(ttfts)) if ttfts else float("nan"),
             "ttft_ticks_p50": pct(ttfts, 50),
+            "ttft_ticks_p95": pct(ttfts, 95),
+            "ttft_ticks_p99": pct(ttfts, 99),
             "latency_ticks_p50": pct(lats, 50),
             "latency_ticks_p95": pct(lats, 95),
+            "latency_ticks_p99": pct(lats, 99),
             "steps": list(self.steps),
         }

@@ -466,6 +466,32 @@ def test_fleet_runner_chaos_streams_never_diverge():
     assert again["tokens"] == want
 
 
+def test_chaos_run_traced_is_bit_identical():
+    """One traced chaos configuration: a tracer attached mid-life (after
+    the untraced baseline) observes the kill scenario without perturbing
+    a single token, and the failover lands in the trace with both the
+    dead replica's engine-lane event and the per-request moves."""
+    from repro.obs import Tracer
+    cfg, eng = make_engine(n_slots=2, max_len=64)
+
+    def reqs():
+        return make_requests(8, cfg, gap=1, seed=3, max_new=(8, 16))
+
+    want = eng.run(reqs())["tokens"]
+    tr = Tracer()
+    eng.tracer = tr
+    try:
+        rep = FleetRunner(eng, 2, plan=FaultPlan(
+            (Fault(5, "kill", replica=1),)), timeout_s=2.0).run(reqs())
+    finally:
+        eng.tracer = None
+    assert rep["tokens"] == want
+    fails = tr.by_name("failover")
+    assert any(e.rid is None and e.replica == 1 for e in fails)
+    assert sum(1 for e in fails if e.rid is not None) == rep["failovers"]
+    assert {e.replica for e in tr.events} == {0, 1}
+
+
 def test_fleet_runner_counts_ride_the_stats_vector():
     from repro.serving import STATS_FIELDS
     assert STATS_FIELDS[8:11] == ("failovers", "resumed_tokens",

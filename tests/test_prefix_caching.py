@@ -308,3 +308,29 @@ def test_serve_cli_rejects_bad_prefix_flags_before_tracing():
         with pytest.raises(SystemExit) as e:
             serve.main(argv)
         assert e.value.code == 2, argv        # argparse usage error, no jit
+
+
+# ==========================================================================
+# satellite: one traced warm configuration (pure observation)
+# ==========================================================================
+
+def test_warm_run_traced_is_bit_identical():
+    """A tracer on the warm engine observes the adoption path — hit,
+    adopt, insert events with the reuse counts — without changing a token
+    of the warm-equals-cold acceptance bar."""
+    from repro.obs import Tracer
+    cfg, cold, warm = _warm_cold()
+    want = cold.run(_shared_reqs(cfg.vocab_size))["tokens"]
+    tr = Tracer()
+    warm.tracer = tr
+    try:
+        rep = warm.run(_shared_reqs(cfg.vocab_size))
+    finally:
+        warm.tracer = None
+    assert rep["tokens"] == want
+    adopts = tr.by_name("prefix_adopt")
+    assert [e.rid for e in adopts] == [1, 2]
+    assert sum(e.attrs["tokens_reused"] for e in adopts) \
+        == rep["prefix_tokens_reused"]
+    assert len(tr.by_name("prefix_hit")) == rep["prefix_hits"]
+    assert tr.by_name("prefix_insert")    # boundary snapshots were cached
